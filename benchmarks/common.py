@@ -1,0 +1,50 @@
+"""Benchmark utilities: timing + vectorized Monte-Carlo estimation."""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SketchConfig, estimate, estimate_margin_mle, sketch
+
+
+def time_us(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock microseconds per call of a jitted fn (blocks on ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_mc", "mle"))
+def _mc_batch(x, y, seeds, cfg: SketchConfig, n_mc: int, mle: bool):
+    def one(seed):
+        kk = jax.random.key(seed)
+        sx = sketch(x, kk, cfg)
+        sy = sketch(y, kk, cfg)
+        est = estimate_margin_mle if mle else estimate
+        return est(sx, sy, cfg)[0]
+
+    return jax.lax.map(one, seeds, batch_size=32)
+
+
+def mc_estimates(x, y, cfg: SketchConfig, n_mc: int, seed0: int = 0, mle=False):
+    """n_mc independent estimates of d_(p)(x[0], y[0]) (fresh R per repeat)."""
+    seeds = jnp.arange(seed0, seed0 + n_mc, dtype=jnp.uint32)
+    return np.asarray(_mc_batch(x, y, seeds, cfg, n_mc, mle))
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

@@ -1,0 +1,40 @@
+"""Lemma 3: Delta_4 <= 0 on non-negative data (and sign flip on opposed signs).
+
+Derived: fraction of random non-negative pairs with Delta_4 <= 0 (must be 1.0)
+and the mean Delta_4 magnitude relative to Var(alternative)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delta_basic_vs_alternative, variance_plain
+
+from .common import emit, time_us
+
+
+def run():
+    n_pairs, D, k = 512, 256, 64
+    X = jax.random.uniform(jax.random.key(3), (n_pairs, D))
+    Y = jax.random.uniform(jax.random.key(4), (n_pairs, D))
+    delta = np.asarray(
+        jax.vmap(lambda a, b: delta_basic_vs_alternative(a, b, 4, k))(X, Y)
+    )
+    valt = np.asarray(
+        jax.vmap(lambda a, b: variance_plain(a, b, 4, k, "alternative"))(X, Y)
+    )
+    frac = float(np.mean(delta <= 1e-6))
+    rel = float(np.mean(-delta / valt))
+    # sign-opposed data flips the inequality (paper §2.2)
+    Xn, Yp = -X - 0.01, Y + 0.01
+    dflip = np.asarray(
+        jax.vmap(lambda a, b: delta_basic_vs_alternative(a, b, 4, k))(Xn, Yp)
+    )
+    frac_flip = float(np.mean(dflip >= -1e-6))
+    us = time_us(
+        jax.jit(jax.vmap(lambda a, b: delta_basic_vs_alternative(a, b, 4, k))), X, Y
+    )
+    return emit([
+        ("lemma3_delta4_nonneg", us / n_pairs,
+         f"frac_delta_le_0={frac:.3f};mean_gain_vs_alt={rel:.3f}"),
+        ("lemma3_delta4_signflip", us / n_pairs, f"frac_delta_ge_0={frac_flip:.3f}"),
+    ])

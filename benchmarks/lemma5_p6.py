@@ -1,0 +1,28 @@
+"""Lemma 5: p=6 estimator (basic strategy) — unbiasedness + variance formula."""
+
+import jax
+
+from repro.core import SketchConfig, exact_lp_distance, variance_plain
+
+from .common import emit, mc_estimates, time_us
+
+
+def run():
+    x = jax.random.uniform(jax.random.key(7), (1, 512))
+    y = jax.random.uniform(jax.random.key(8), (1, 512))
+    k, n_mc = 128, 2000
+    cfg = SketchConfig(p=6, k=k, strategy="basic", block_d=128)
+    ests = mc_estimates(x, y, cfg, n_mc)
+    true = float(exact_lp_distance(x[0], y[0], 6))
+    oracle = float(variance_plain(x[0], y[0], 6, k, "basic"))
+    relerr = abs(ests.var() - oracle) / oracle
+    bias_z = abs(ests.mean() - true) / (oracle / n_mc) ** 0.5
+    us = time_us(lambda: mc_estimates(x, y, cfg, 64))
+    # Delta_6 <= 0 empirical check (paper leaves it as a conjecture)
+    from repro.core import delta_basic_vs_alternative
+    d6 = float(delta_basic_vs_alternative(x[0], y[0], 6, k))
+    return emit([
+        ("lemma5_p6_variance", us / 64,
+         f"mc_var={ests.var():.4g};oracle={oracle:.4g};relerr={relerr:.3f};bias_z={bias_z:.2f}"),
+        ("lemma5_delta6_conjecture", 0.0, f"delta6={d6:.4g}(<=0)"),
+    ])

@@ -1,0 +1,50 @@
+"""Roofline report: reads experiments/dryrun/*.json, emits the §Roofline
+table rows (also consumed by EXPERIMENTS.md generation)."""
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def load_cells(out_dir=None):
+    import os
+    if out_dir is None:
+        out_dir = ("experiments/dryrun_v2"
+                   if os.path.isdir("experiments/dryrun_v2") else "experiments/dryrun")
+    cells = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def bottleneck_sentence(r: dict) -> str:
+    dom = r["roofline"]["dominant"]
+    hc = r["hlo_cost"]
+    if dom == "collective_s":
+        top = max(hc["collectives_by_type"], key=hc["collectives_by_type"].get)
+        return (f"collective-bound ({top}); reduce cross-shard traffic "
+                f"(sharding layout / fusion of {top}s / compression)")
+    if dom == "memory_s":
+        return ("HBM-bound; increase arithmetic intensity (fuse elementwise, "
+                "larger microbatch per chip, avoid re-read of weights/caches)")
+    return "compute-bound; reduce recompute (remat policy) and non-MXU flops"
+
+
+def run():
+    rows = []
+    for r in load_cells():
+        name = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        if r.get("status") == "skipped":
+            rows.append((f"dryrun_{name}", 0.0, "skipped:" + r["reason"][:40]))
+            continue
+        if r.get("status") != "ok":
+            rows.append((f"dryrun_{name}", 0.0, "ERROR"))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            f"dryrun_{name}", r["compile_s"] * 1e6,
+            f"dominant={rf['dominant'][:-2]};frac={rf['roofline_fraction']:.4f};"
+            f"peak_gb={r['memory']['peak_gb']:.1f};useful={rf['useful_flops_ratio']:.2f}"))
+    return emit(rows)

@@ -1,0 +1,47 @@
+"""Benchmark driver: one module per paper lemma/table + system benchmarks.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
+Modules are imported lazily so a failure in one doesn't mask the others.
+"""
+
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.lemma12_variance",
+    "benchmarks.lemma3_delta",
+    "benchmarks.lemma4_margin_mle",
+    "benchmarks.lemma5_p6",
+    "benchmarks.lemma6_subgaussian",
+    "benchmarks.scaling",
+    "benchmarks.kernels",
+    "benchmarks.dedup",
+    "benchmarks.train_throughput",
+    "benchmarks.roofline_report",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    only = sys.argv[1:] or None
+    for mod in MODULES:
+        if only and not any(sel in mod for sel in only):
+            continue
+        try:
+            m = importlib.import_module(mod)
+        except ModuleNotFoundError:
+            continue  # optional module not built yet
+        try:
+            m.run()
+        except Exception:
+            failed.append(mod)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED_MODULES={failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

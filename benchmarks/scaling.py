@@ -1,0 +1,43 @@
+"""The headline cost claim: all-pairs O(n^2 D) exact vs O(nDk + n^2 k) sketched.
+
+Derived: measured wall-clock speedup of the sketch path at D >> k, plus the
+median relative estimation error it pays for it."""
+
+import jax
+import numpy as np
+
+from repro.core import (
+    SketchConfig,
+    exact_pairwise_lp,
+    pairwise_distances,
+    sketch,
+)
+
+from .common import emit, time_us
+
+
+def run():
+    n, D, k = 256, 8192, 64
+    X = jax.random.uniform(jax.random.key(11), (n, D))
+    cfg = SketchConfig(p=4, k=k, strategy="basic", block_d=1024)
+    key = jax.random.key(0)
+
+    exact_fn = jax.jit(lambda A: exact_pairwise_lp(A, A, 4))
+    us_exact = time_us(exact_fn, X, reps=3, warmup=1)
+
+    sk = sketch(X, key, cfg)
+    sketch_fn = jax.jit(lambda A: sketch(A, key, cfg))
+    pair_fn = jax.jit(lambda s: pairwise_distances(s, None, cfg))
+    us_sketch = time_us(sketch_fn, X, reps=3, warmup=1)
+    us_pair = time_us(pair_fn, sk, reps=3, warmup=1)
+
+    D_est = np.asarray(pair_fn(sk))
+    D_true = np.asarray(exact_fn(X))
+    off = ~np.eye(n, dtype=bool)
+    rel = np.abs(D_est[off] - D_true[off]) / np.maximum(D_true[off], 1e-9)
+    total_sketch = us_sketch + us_pair
+    return emit([
+        ("scaling_exact_n2D", us_exact, f"n={n};D={D}"),
+        ("scaling_sketch_total", total_sketch,
+         f"sketch_us={us_sketch:.0f};pair_us={us_pair:.0f};speedup={us_exact/total_sketch:.1f}x;median_rel_err={np.median(rel):.3f}"),
+    ])

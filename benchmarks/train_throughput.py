@@ -1,0 +1,47 @@
+"""End-to-end train-step throughput on the reduced model zoo (CPU wall-clock;
+TPU projections come from the dry-run roofline, EXPERIMENTS.md)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig, TrainKnobs, reduced
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_parallel
+from repro.launch.steps import build_train_step
+from repro.models import build_model
+from repro.optim.adamw import adamw_init
+
+from .common import emit, time_us
+
+
+def run():
+    rows = []
+    for arch in ("gemma_2b", "mamba2_370m", "moonshot_v1_16b_a3b"):
+        cfg = reduced(get_config(arch))
+        knobs = TrainKnobs(microbatches=1, remat="none",
+                           sequence_parallel=False, attn_q_chunk=64,
+                           vocab_chunk=64, ssd_chunk=32)
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        par = make_parallel(mesh, knobs=knobs, constrain=False)
+        model = build_model(cfg, par, knobs)
+        B, S = 4, 64
+        shape = ShapeConfig("bench", S, B, "train")
+        step_fn, _ = build_train_step(model, knobs, shape)
+        jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+        data = SyntheticLM(DataConfig(cfg.vocab_size, S, B))
+        params = model.init(jax.random.key(0))
+        opt = adamw_init(params)
+        batch = data.batch(0)
+
+        def one():
+            nonlocal params, opt
+            params, opt, m = jstep(params, opt, batch, jnp.int32(0))
+            return m["loss"]
+
+        us = time_us(one, reps=4, warmup=2)
+        toks = B * S / (us / 1e6)
+        rows.append((f"train_step_reduced_{arch}", us,
+                     f"tokens_per_s={toks:.0f}"))
+    return emit(rows)

@@ -1,0 +1,29 @@
+"""Sketch-based near-duplicate filtering inside a training data pipeline
+(the paper's technique as data infrastructure).
+
+  PYTHONPATH=src python examples/dedup_pipeline.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.dedup import SketchDedup
+from repro.data.pipeline import DataConfig, SyntheticLM
+
+data = SyntheticLM(DataConfig(vocab_size=5000, seq_len=128, global_batch=16, seed=7))
+dedup = SketchDedup(feature_dims=512, k=256, threshold=0.2)
+
+total_kept = total_dropped = 0
+for step in range(8):
+    batch = data.batch(step)["tokens"]
+    if step % 3 == 2:  # simulate a crawler re-emitting earlier documents
+        batch = jnp.concatenate([batch[:8], data.batch(step - 1)["tokens"][:8]])
+    keep, stats = dedup.filter(batch)
+    total_kept += stats["kept"]
+    total_dropped += stats["dropped"]
+    print(f"step {step}: kept {stats['kept']:2d} dropped {stats['dropped']:2d}")
+
+print(f"\ntotal: kept {total_kept}, dropped {total_dropped} "
+      f"(reservoir holds {dedup._res.n} sketches, "
+      f"{dedup._res.U.nbytes/1e6:.2f} MB)")
+assert total_dropped >= 8  # the re-emitted documents were caught

@@ -1,0 +1,188 @@
+"""Configuration dataclasses: model architecture + run shapes + training knobs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "ShapeConfig", "TrainKnobs", "SHAPES", "reduced"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    mlp_variant: str = "swiglu"      # swiglu | geglu | gelu | relu
+    norm_eps: float = 1e-6
+    rope_theta: float = 10_000.0
+    rope_style: str = "standard"     # standard | mrope | none
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+    tie_embeddings: bool = False
+    attention: str = "full"          # full | none (ssm)
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    embed_scale: bool = False        # multiply embeddings by sqrt(d_model) (gemma)
+    window: int = 0                  # sliding-window size for local attention
+    logit_softcap: float = 0.0
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_token: int = 0
+    moe_interleave: int = 1          # layer i is MoE iff (i % interleave == interleave-1)
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_block_tokens: int = 32768    # dispatch token-block size (perf lever)
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_groups: int = 1
+    # --- hybrid (recurrentgemma / griffin) ---
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    lru_width: int = 0
+    # --- encoder-decoder ---
+    num_encoder_layers: int = 0
+    # --- modality frontend stub ---
+    frontend: str = "none"           # none | vision | audio
+    num_patches: int = 0             # vision stub: patches prepended to the sequence
+    dtype: str = "bfloat16"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def activation_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.num_experts == 0:
+            return False
+        return (i % self.moe_interleave) == (self.moe_interleave - 1)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run 500k-token contexts? (SSM / bounded-window hybrids)"""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks), used for MODEL_FLOPS."""
+        E, hd = self.d_model, self.resolved_head_dim
+        n_attn = self.num_heads * hd * E * 2 + self.num_kv_heads * hd * E * 2
+        n_mlp_dense = E * self.d_ff * (3 if self.mlp_variant in ("swiglu", "geglu") else 2)
+        total = 0
+        layers = self.num_layers + self.num_encoder_layers
+        for i in range(self.num_layers):
+            kind = self.block_pattern[i % len(self.block_pattern)] if self.block_pattern else (
+                "ssm" if self.family == "ssm" else "attn")
+            if kind == "rec":
+                total += E * 2 * self.lru_width + self.lru_width * E + 3 * self.lru_width + \
+                         self.ssm_conv * self.lru_width + 2 * self.lru_width * self.lru_width
+            elif kind == "ssm":
+                din = self.d_inner
+                zxbcdt = 2 * din + 2 * self.ssm_groups * self.ssm_state + self.ssm_heads
+                total += E * zxbcdt + din * E + self.ssm_conv * (din + 2 * self.ssm_groups * self.ssm_state)
+            else:
+                total += n_attn
+            if kind in ("attn", "rec"):
+                if self.is_moe_layer(i):
+                    ff = E * self.d_ff * 3
+                    total += self.num_experts * ff + self.num_shared_experts * ff + E * self.num_experts
+                else:
+                    total += n_mlp_dense
+        for _ in range(self.num_encoder_layers):  # encoder + cross-attention
+            total += n_attn + n_mlp_dense
+            total += n_attn  # decoder cross-attn (approximate bookkeeping)
+        total += self.vocab_size * E * (1 if self.tie_embeddings else 2)
+        total += E * 2 * layers  # norms
+        return total
+
+    @property
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if self.num_experts == 0:
+            return self.param_count
+        E = self.d_model
+        ff = E * self.d_ff * 3
+        inactive = 0
+        for i in range(self.num_layers):
+            if self.is_moe_layer(i):
+                inactive += (self.num_experts - self.num_experts_per_token) * ff
+        return self.param_count - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainKnobs:
+    """Performance/memory knobs — the levers of the §Perf hillclimb."""
+
+    microbatches: int = 8
+    remat: str = "layer"             # none | layer
+    sequence_parallel: bool = True
+    grad_accum_dtype: str = "float32"   # float32 | bfloat16
+    opt_state_dtype: str = "float32"
+    attn_q_chunk: int = 1024          # chunked-causal attention query block
+    vocab_chunk: int = 2048           # chunked softmax-CE seq block
+    ssd_chunk: int = 256              # mamba2 SSD chunk length
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    fsdp: bool = True
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    base = dict(
+        num_layers=min(cfg.num_layers, 2 * max(1, len(cfg.block_pattern))),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads > 1 else 1,
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32 if cfg.head_dim else 0,
+        num_experts=min(cfg.num_experts, 4),
+        num_experts_per_token=min(cfg.num_experts_per_token, 2),
+        capacity_factor=4.0,  # avoid capacity drops in tiny smoke configs
+        lru_width=128 if cfg.lru_width else 0,
+        ssm_state=min(cfg.ssm_state, 16),
+        ssm_head_dim=32 if cfg.ssm_state else 64,
+        num_encoder_layers=min(cfg.num_encoder_layers, 2),
+        window=min(cfg.window, 64),
+        num_patches=min(cfg.num_patches, 4),
+        mrope_sections=(4, 6, 6),  # sums to reduced head_dim/2 = 16
+        dtype="float32",
+    )
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)

@@ -1,0 +1,21 @@
+"""gemma-2b [dense] — arXiv:2403.08295 (hf-verified).
+
+18L d_model=2048 8H (MQA kv=1) head_dim=256 d_ff=16384 GeGLU vocab=256000,
+tied embeddings, embeddings scaled by sqrt(d_model)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    mlp_variant="geglu",
+    tie_embeddings=True,
+    embed_scale=True,
+)

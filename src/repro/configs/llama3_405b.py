@@ -1,0 +1,20 @@
+"""llama3-405b [dense] — arXiv:2407.21783 (unverified tier).
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256; SwiGLU, RMSNorm,
+RoPE theta 500k.  The memory-heaviest cell of the pool — train knobs default
+to bf16 grad-accum/optimizer state (see EXPERIMENTS.md §Perf)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    mlp_variant="swiglu",
+    rope_theta=500_000.0,
+)

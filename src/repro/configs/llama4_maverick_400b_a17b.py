@@ -1,0 +1,27 @@
+"""llama4-maverick-400b-a17b [moe] — hf:meta-llama (unverified tier).
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128 experts
+top-1 + 1 shared expert.  DESIGN.md note: the pool line with MoE on *every*
+layer gives ~773B params; HF Maverick interleaves MoE every 2nd layer
+(interleave_moe_layer_step=2), which reproduces the 400B/17B-active name —
+we adopt the interleave (documented deviation)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    mlp_variant="swiglu",
+    rope_theta=500_000.0,
+    num_experts=128,
+    num_experts_per_token=1,
+    moe_interleave=2,
+    num_shared_experts=1,
+    frontend="none",  # early-fusion vision stubbed out of the LM backbone
+)

@@ -1,0 +1,26 @@
+"""The paper's own workload as an arch config: distributed l4 sketching +
+all-pairs estimation over a web-scale matrix A (n x D).
+
+"seq_len" maps to D (row width), "global_batch" to the row-block size n per
+step; train_step is the sketch+pairwise pass (see launch/dryrun.py)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="lpsketch-pairwise",
+    family="sketch",
+    num_layers=0,
+    d_model=0,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=0,
+    attention="none",
+    rope_style="none",
+)
+
+# sketch workload hyper-parameters
+SKETCH_P = 4
+SKETCH_K = 256
+SKETCH_BLOCK_D = 4096
+CORPUS_ROWS = 1_048_576   # previously sketched corpus (stored as packed factors)

@@ -1,0 +1,25 @@
+"""mamba2-370m [ssm] — arXiv:2405.21060 (SSD; unverified tier).
+
+48L d_model=1024, attention-free, d_ff=0, ssm_state=128; expand=2 ->
+d_inner=2048, head_dim=64 -> 32 heads, conv=4, vocab=50280 (tied).
+Sub-quadratic: long_500k runs."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=0,
+    vocab_size=50280,
+    attention="none",
+    rope_style="none",
+    tie_embeddings=True,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv=4,
+)

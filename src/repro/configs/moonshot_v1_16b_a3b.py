@@ -1,0 +1,24 @@
+"""moonshot-v1-16b-a3b [moe] — hf:moonshotai/Moonlight-16B-A3B (hf-verified).
+
+48L d_model=2048 16H (kv=16) expert d_ff=1408 vocab=163840, MoE 64 experts
+top-6 (+2 shared in HF — we keep 2 shared), every layer MoE."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    mlp_variant="swiglu",
+    rope_theta=50_000.0,
+    num_experts=64,
+    num_experts_per_token=6,
+    moe_interleave=1,
+    num_shared_experts=2,
+    moe_block_tokens=8192,
+)

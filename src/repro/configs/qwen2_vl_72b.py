@@ -1,0 +1,25 @@
+"""qwen2-vl-72b [vlm] — arXiv:2409.12191 (hf-verified backbone dims).
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064; M-RoPE (3 sections
+over hd/2=64: 16/24/24); dynamic-resolution vision tower is a STUB —
+input_specs supplies precomputed patch embeddings prepended to the text
+sequence."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    mlp_variant="swiglu",
+    rope_style="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    frontend="vision",
+    num_patches=256,
+)

@@ -1,0 +1,27 @@
+"""recurrentgemma-9b [hybrid] — arXiv:2402.19427 (Griffin; unverified tier).
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 GeGLU vocab=256000; RG-LRU +
+local attention (window 2048) in a (rec, rec, attn) pattern: 12 full groups
++ 2 trailing recurrent blocks = 38.  lru_width=4096.  Sub-quadratic:
+long_500k runs (bounded window + recurrent state)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    mlp_variant="geglu",
+    tie_embeddings=True,
+    embed_scale=True,
+    window=2048,
+    block_pattern=("rec", "rec", "attn"),
+    lru_width=4096,
+    ssm_conv=4,
+)

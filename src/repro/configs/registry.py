@@ -1,0 +1,33 @@
+"""Architecture registry: --arch <id> resolves here."""
+
+from __future__ import annotations
+
+import importlib
+
+from .base import ModelConfig
+
+ARCHS = [
+    "qwen2_vl_72b",
+    "seamless_m4t_medium",
+    "llama4_maverick_400b_a17b",
+    "moonshot_v1_16b_a3b",
+    "mamba2_370m",
+    "gemma_2b",
+    "starcoder2_15b",
+    "starcoder2_3b",
+    "llama3_405b",
+    "recurrentgemma_9b",
+    "lpsketch_pairwise",  # the paper's own workload
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,25 @@
+"""seamless-m4t-medium [audio] — arXiv:2308.11596 (hf-verified).
+
+12L (read as 12 encoder + 12 decoder) d_model=1024 16H (MHA kv=16)
+d_ff=4096 vocab=256206.  Speech frontend is a STUB: input_specs supplies
+precomputed frame embeddings (B, S_enc, d_model).  Sinusoidal positions,
+LayerNorm, ReLU FFN (NLLB lineage)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,
+    num_encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    mlp_variant="relu",
+    norm="layernorm",
+    rope_style="none",
+    tie_embeddings=True,
+    frontend="audio",
+)

@@ -1,0 +1,20 @@
+"""starcoder2-15b [dense] — arXiv:2402.19173 (hf-verified).
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152; GELU FFN,
+LayerNorm, RoPE."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_variant="gelu",
+    norm="layernorm",
+    rope_theta=100_000.0,
+)

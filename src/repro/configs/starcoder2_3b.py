@@ -1,0 +1,19 @@
+"""starcoder2-3b [dense] — arXiv:2402.19173 (hf-verified).
+
+30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152; GELU, LayerNorm, RoPE."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    family="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    d_ff=12288,
+    vocab_size=49152,
+    mlp_variant="gelu",
+    norm="layernorm",
+    rope_theta=100_000.0,
+)

@@ -1,0 +1,40 @@
+"""Core of the reproduction: even-p l_p distance sketching (Ping Li, 2008).
+
+Public API:
+
+  decomposition:  lp_coefficients, interaction_orders, exact_lp_distance,
+                  exact_lp_distance_decomposed, exact_pairwise_lp, power_moments
+  projections:    ProjectionSpec, projection_block, projection_matrix
+  sketch:         SketchConfig, LpSketch, sketch
+  estimators:     estimate, estimate_margin_mle, margin_mle_root
+  variance:       variance_plain, variance_margin_mle, delta_basic_vs_alternative
+  pairwise:       pairwise_distances, pairwise_margin_mle, knn, pack_sketch
+  distributed:    sketch_sharded, pairwise_sharded, knn_sharded
+"""
+
+from .decomposition import (
+    exact_lp_distance,
+    exact_lp_distance_decomposed,
+    exact_pairwise_lp,
+    interaction_orders,
+    lp_coefficients,
+    mixed_moment,
+    power_moments,
+)
+from .distributed import knn_sharded, pairwise_sharded, sketch_sharded
+from .estimators import estimate, estimate_margin_mle, margin_mle_root
+from .pairwise import knn, pack_sketch, pairwise_distances, pairwise_margin_mle
+from .projections import ProjectionSpec, fourth_moment, projection_block, projection_matrix
+from .sketch import LpSketch, SketchConfig, sketch
+from .variance import delta_basic_vs_alternative, variance_margin_mle, variance_plain
+
+__all__ = [
+    "lp_coefficients", "interaction_orders", "exact_lp_distance",
+    "exact_lp_distance_decomposed", "exact_pairwise_lp", "power_moments",
+    "mixed_moment", "ProjectionSpec", "fourth_moment", "projection_block",
+    "projection_matrix", "SketchConfig", "LpSketch", "sketch", "estimate",
+    "estimate_margin_mle", "margin_mle_root", "variance_plain",
+    "variance_margin_mle", "delta_basic_vs_alternative", "pairwise_distances",
+    "pairwise_margin_mle", "knn", "pack_sketch", "sketch_sharded",
+    "pairwise_sharded", "knn_sharded",
+]

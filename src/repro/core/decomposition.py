@@ -1,0 +1,116 @@
+"""Exact even-p decomposition of l_p distances (paper §1.1 / §2 / §3).
+
+For even p and x, y in R^D:
+
+    d_(p)(x, y) = sum_i |x_i - y_i|^p
+                = sum_{m=0}^{p} C(p, m) (-1)^m  <x^{p-m}, y^m>
+                = ||x||_p^p + ||y||_p^p + sum_{m=1}^{p-1} c_m <x^{p-m}, y^m>
+
+with c_m = (-1)^m C(p, m).  The two marginal norms are computed exactly by a
+linear scan; the p-1 mixed-order inner products are what the paper estimates
+with random projections.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "lp_coefficients",
+    "interaction_orders",
+    "exact_lp_distance",
+    "exact_lp_distance_decomposed",
+    "exact_pairwise_lp",
+    "power_moments",
+    "mixed_moment",
+]
+
+
+def _check_even_p(p: int) -> None:
+    if p < 2 or p % 2 != 0:
+        raise ValueError(f"the decomposition requires even p >= 2, got p={p}")
+
+
+def lp_coefficients(p: int) -> tuple[int, ...]:
+    """Coefficients c_m = (-1)^m C(p, m) for m = 0..p.
+
+    p=4 -> (1, -4, 6, -4, 1); p=6 -> (1, -6, 15, -20, 15, -6, 1).
+    """
+    _check_even_p(p)
+    return tuple((-1) ** m * math.comb(p, m) for m in range(p + 1))
+
+
+def interaction_orders(p: int) -> tuple[tuple[int, int, int], ...]:
+    """(x_order a, y_order c, coefficient c_m) for the p-1 interaction terms.
+
+    Term m estimates <x^{p-m}, y^m>; a = p - m, c = m, m = 1..p-1.
+    """
+    coeffs = lp_coefficients(p)
+    return tuple((p - m, m, coeffs[m]) for m in range(1, p))
+
+
+@partial(jax.jit, static_argnames=("p",))
+def exact_lp_distance(x: jax.Array, y: jax.Array, p: int) -> jax.Array:
+    """Reference d_(p) = sum_i |x_i - y_i|^p along the last axis."""
+    _check_even_p(p)
+    d = (x - y).astype(jnp.promote_types(x.dtype, jnp.float32))
+    return jnp.sum(d**p, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def exact_lp_distance_decomposed(x: jax.Array, y: jax.Array, p: int) -> jax.Array:
+    """d_(p) via the marginal-norms + interactions decomposition (must equal
+    :func:`exact_lp_distance` exactly up to float assoc.)."""
+    _check_even_p(p)
+    acc_t = jnp.promote_types(x.dtype, jnp.float32)
+    x = x.astype(acc_t)
+    y = y.astype(acc_t)
+    total = jnp.sum(x**p, axis=-1) + jnp.sum(y**p, axis=-1)
+    for a, c, coef in interaction_orders(p):
+        total = total + coef * jnp.sum((x**a) * (y**c), axis=-1)
+    return total
+
+
+@partial(jax.jit, static_argnames=("p",))
+def exact_pairwise_lp(A: jax.Array, B: jax.Array, p: int) -> jax.Array:
+    """All-pairs exact l_p^p distances between rows of A (n, D) and B (m, D).
+
+    O(n * m * D) — the cost the paper's sketches avoid; used as the oracle in
+    tests/benchmarks.
+    """
+    _check_even_p(p)
+    return exact_lp_distance(A[:, None, :], B[None, :, :], p)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def power_moments(X: jax.Array, p: int) -> jax.Array:
+    """Even power moments M[..., j-1] = sum_i X_i^{2j} for j = 1..p-1.
+
+    One linear scan per row.  Column p//2 - 1 is the marginal norm ||x||_p^p.
+    All the margins the plain estimator and the margin-MLE need.
+    """
+    _check_even_p(p)
+    X = X.astype(jnp.promote_types(X.dtype, jnp.float32))
+    x2 = X * X
+    cols = []
+    acc = x2
+    for _ in range(1, p):
+        cols.append(jnp.sum(acc, axis=-1))
+        acc = acc * x2
+    return jnp.stack(cols, axis=-1)
+
+
+def marginal_norm(moments: jax.Array, p: int) -> jax.Array:
+    """Extract ||x||_p^p from a :func:`power_moments` result."""
+    return moments[..., p // 2 - 1]
+
+
+@partial(jax.jit, static_argnames=("a", "c"))
+def mixed_moment(x: jax.Array, y: jax.Array, a: int, c: int) -> jax.Array:
+    """<x^a, y^c> = sum_i x_i^a y_i^c (used by the variance oracles)."""
+    acc_t = jnp.promote_types(x.dtype, jnp.float32)
+    return jnp.sum(x.astype(acc_t) ** a * y.astype(acc_t) ** c, axis=-1)

@@ -1,0 +1,178 @@
+"""Distributed sketching & pairwise estimation (shard_map, mesh-native).
+
+Layout (paper's data matrix A (n, D) at cluster scale):
+
+  * A is sharded rows -> ``data`` axis, columns -> ``model`` axis.
+  * Each shard sketches its column slice against *its slice of the global R*
+    (counter-based tiles, offset by the shard's global column-block index) and
+    the k-dim partials are psum'd over ``model`` — the projection contracts
+    over D, so the only collective is an all-reduce of (n_loc, nvec, k),
+    k << D.  Marginal moments reduce the same way.
+  * All-pairs blocks keep rows local and all-gather the (much smaller) packed
+    factors of the opposing side over ``data``.
+
+The multi-pod mesh prepends a ``pod`` axis: rows are sharded over
+(pod, data) jointly — pass ``data_axes=("pod", "data")``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .decomposition import power_moments
+from .pairwise import pack_sketch
+from .sketch import LpSketch, SketchConfig, sketch
+
+__all__ = ["sketch_sharded", "pairwise_sharded", "knn_sharded"]
+
+
+def _tuple(axes) -> tuple:
+    return tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+
+
+def sketch_sharded(
+    X: jax.Array,
+    key: jax.Array,
+    cfg: SketchConfig,
+    mesh: Mesh,
+    *,
+    data_axes: Sequence[str] | str = "data",
+    model_axis: str = "model",
+) -> LpSketch:
+    """Sketch a (n, D) matrix sharded (rows=data_axes, cols=model_axis).
+
+    Requires D % (model_axis_size * cfg.block_d) == 0 so every shard draws
+    whole R tiles.  Returns an LpSketch sharded over rows and replicated over
+    ``model_axis`` (ready for pairwise work).
+    """
+    data_axes = _tuple(data_axes)
+    msize = mesh.shape[model_axis]
+    n, D = X.shape
+    if D % (msize * cfg.block_d) != 0:
+        raise ValueError(
+            f"D={D} must be divisible by model_axis_size*block_d="
+            f"{msize}*{cfg.block_d}"
+        )
+    blocks_per_shard = D // msize // cfg.block_d
+
+    def local_sketch(xl: jax.Array) -> LpSketch:
+        midx = jax.lax.axis_index(model_axis)
+        # block_offset is dynamic per shard; fold it into the key stream by
+        # scanning local blocks with a dynamic global index.  Moments are
+        # accumulated in the SAME block scan — one linear pass over the data
+        # (the paper's assumption, and what the fused Pallas kernel does);
+        # computing power_moments on the full row materializes p-1 full-width
+        # power intermediates (dry-run: 43 GB/device at D=134M).
+        nloc = xl.shape[0]
+        xb = xl.reshape(nloc, blocks_per_shard, cfg.block_d)
+
+        from .sketch import sketch_block_contrib  # local import to avoid cycle
+
+        def body(carry, i):
+            U, M = carry
+            gidx = midx * blocks_per_shard + i
+            U = U + sketch_block_contrib(xb[:, i], gidx, key, cfg)
+            M = M + power_moments(xb[:, i], cfg.p)
+            return (U, M), None
+
+        U0 = jnp.zeros((nloc, cfg.vectors_per_row, cfg.k), cfg.projection.dtype)
+        M0 = jnp.zeros((nloc, cfg.p - 1), jnp.float32)
+        U0 = jax.lax.pcast(U0, (*data_axes, model_axis), to="varying")
+        M0 = jax.lax.pcast(M0, (*data_axes, model_axis), to="varying")
+        (U, M), _ = jax.lax.scan(body, (U0, M0), jnp.arange(blocks_per_shard))
+        U = jax.lax.psum(U, model_axis)
+        moments = jax.lax.psum(M, model_axis)
+        return LpSketch(U=U, moments=moments)
+
+    in_spec = P(data_axes, model_axis)
+    out_spec = LpSketch(U=P(data_axes, None, None), moments=P(data_axes, None))
+    return jax.shard_map(
+        local_sketch, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec
+    )(X)
+
+
+def pairwise_sharded(
+    sk: LpSketch,
+    cfg: SketchConfig,
+    mesh: Mesh,
+    *,
+    data_axes: Sequence[str] | str = "data",
+    clip: bool = True,
+) -> jax.Array:
+    """Self all-pairs distances for a row-sharded sketch.
+
+    Output (n, n) sharded rows over ``data_axes``: each shard computes its
+    (n_loc, n) strip against the all-gathered packed right factor.
+    """
+    data_axes = _tuple(data_axes)
+    A, B, norms = pack_sketch(sk, cfg)
+
+    def strip(a_loc, b_loc, n_loc, n_all_in):
+        b_all = b_loc
+        n_all = n_all_in
+        for ax in data_axes:
+            b_all = jax.lax.all_gather(b_all, ax, tiled=True)
+            n_all = jax.lax.all_gather(n_all, ax, tiled=True)
+        D = n_loc[:, None] + n_all[None, :] + a_loc @ b_all.T
+        return jnp.maximum(D, 0.0) if clip else D
+
+    spec_rows = P(data_axes, None)
+    spec_vec = P(data_axes)
+    return jax.shard_map(
+        strip,
+        mesh=mesh,
+        in_specs=(spec_rows, spec_rows, spec_vec, spec_vec),
+        out_specs=spec_rows,
+    )(A, B, norms, norms)
+
+
+def knn_sharded(
+    queries: LpSketch,
+    corpus: LpSketch,
+    cfg: SketchConfig,
+    mesh: Mesh,
+    top_k: int = 10,
+    *,
+    data_axes: Sequence[str] | str = "data",
+):
+    """Distributed KNN: corpus rows sharded; queries replicated.
+
+    Each shard top-k's its local strip; the (small) candidate lists are
+    all-gathered and re-ranked — a standard two-stage distributed ANN reduce.
+    Returns (distances (q, top_k), global indices (q, top_k)).
+    """
+    data_axes = _tuple(data_axes)
+    Aq, _, nq = pack_sketch(queries, cfg)
+    _, Bc, nc = pack_sketch(corpus, cfg)
+
+    def local_topk(aq, nq_, bc, nc_):
+        nloc = bc.shape[0]
+        D = nq_[:, None] + nc_[None, :] + aq @ bc.T
+        D = jnp.maximum(D, 0.0)
+        neg, idx = jax.lax.top_k(-D, min(top_k, nloc))
+        # globalize indices
+        shard = jax.lax.axis_index(data_axes[0])
+        for ax in data_axes[1:]:
+            shard = shard * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        gidx = idx + shard * nloc
+        # gather candidates from every shard and re-rank
+        negs, gidxs = neg, gidx
+        for ax in data_axes:
+            negs = jax.lax.all_gather(negs, ax, axis=1, tiled=True)
+            gidxs = jax.lax.all_gather(gidxs, ax, axis=1, tiled=True)
+        neg2, pos = jax.lax.top_k(negs, top_k)
+        return -neg2, jnp.take_along_axis(gidxs, pos, axis=1)
+
+    return jax.shard_map(
+        local_topk,
+        mesh=mesh,
+        in_specs=(P(None, None), P(None), P(data_axes, None), P(data_axes)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )(Aq, nq, Bc, nc)

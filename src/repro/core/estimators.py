@@ -1,0 +1,127 @@
+"""Distance estimators from power sketches (paper §2.1, §2.2, §2.3, §3).
+
+- ``estimate``: the plain unbiased estimator
+      d_hat = ||x||_p^p + ||y||_p^p + (1/k) sum_m c_m u_{p-m}^T v_m
+  (Lemmas 1/2/5/6 give its variance; see variance.py).
+
+- ``estimate_margin_mle``: the margin-regularized estimator of Lemma 4 — each
+  interaction a_m is the root of a cubic that conditions on the exact marginal
+  moments, solved by safeguarded Newton from the plain estimate ("one-step
+  Newton-Rhapson" in the paper; we default to 2 steps).
+
+Beyond-paper hardening (documented in DESIGN.md):
+  * Cauchy-Schwarz clamp |a_m| <= sqrt(Mx*My) on every interaction estimate.
+  * optional clip of the final distance at 0 (true l_p distances are >= 0).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .decomposition import interaction_orders
+from .sketch import LpSketch, SketchConfig
+
+__all__ = ["interaction_dots", "estimate", "margin_mle_root", "estimate_margin_mle"]
+
+
+def _uv(sx: LpSketch, sy: LpSketch, cfg: SketchConfig, m: int, a: int, c: int):
+    """(u, v) for interaction term m: u ~ x^{a}, v ~ y^{c} under the right R."""
+    if cfg.strategy == "basic":
+        return sx.U[..., a - 1, :], sy.U[..., c - 1, :]
+    no = cfg.num_orders
+    return sx.U[..., m - 1, :], sy.U[..., no + m - 1, :]
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def interaction_dots(sx: LpSketch, sy: LpSketch, cfg: SketchConfig) -> jax.Array:
+    """(..., p-1) per-term sketch dot products u_{p-m}^T v_m (not yet /k)."""
+    dots = []
+    for a, c, _ in interaction_orders(cfg.p):
+        u, v = _uv(sx, sy, cfg, m=c, a=a, c=c)
+        dots.append(jnp.sum(u * v, axis=-1))
+    return jnp.stack(dots, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("cfg", "clip"))
+def estimate(
+    sx: LpSketch, sy: LpSketch, cfg: SketchConfig, *, clip: bool = False
+) -> jax.Array:
+    """Plain unbiased estimator of d_(p)(x, y) (rowwise over the sketches)."""
+    d = sx.norm_pp(cfg.p) + sy.norm_pp(cfg.p)
+    dots = interaction_dots(sx, sy, cfg)
+    coefs = jnp.asarray([c for _, _, c in interaction_orders(cfg.p)], d.dtype)
+    d = d + jnp.sum(coefs * dots, axis=-1) / cfg.k
+    return jnp.maximum(d, 0.0) if clip else d
+
+
+def margin_mle_root(
+    t: jax.Array,
+    nu: jax.Array,
+    nv: jax.Array,
+    Mx: jax.Array,
+    My: jax.Array,
+    k: int,
+    newton_steps: int = 2,
+) -> jax.Array:
+    """Solve the Lemma-4 cubic for one interaction term.
+
+        f(a) = a^3 - (a^2/k) t - (Mx My / k) t - a Mx My + (a/k)(Mx nv + My nu)
+
+    Args:
+      t: u^T v (k-sample dot).  nu, nv: ||u||^2, ||v||^2.
+      Mx, My: exact marginal moments sum x^{2(p-m)}, sum y^{2m}.
+
+    Newton iterations start from the plain estimate t/k; each iterate is
+    clamped to the Cauchy-Schwarz ball |a| <= sqrt(Mx My) (safeguard — the
+    paper's closed-form root selection is equivalent in the bulk).
+    """
+    t = t.astype(jnp.float32)
+    nu, nv = nu.astype(jnp.float32), nv.astype(jnp.float32)
+    Mx, My = Mx.astype(jnp.float32), My.astype(jnp.float32)
+    MxMy = Mx * My
+    bound = jnp.sqrt(MxMy)
+    cross = (Mx * nv + My * nu) / k
+
+    def f(a):
+        return a**3 - (a**2 / k) * t - (MxMy / k) * t - a * MxMy + a * cross
+
+    def fp(a):
+        return 3 * a**2 - (2 * a / k) * t - MxMy + cross
+
+    a = jnp.clip(t / k, -bound, bound)
+    for _ in range(newton_steps):
+        step = f(a) / jnp.where(jnp.abs(fp(a)) < 1e-30, 1e-30, fp(a))
+        a = jnp.clip(a - step, -bound, bound)
+    return a
+
+
+@partial(jax.jit, static_argnames=("cfg", "newton_steps", "clip"))
+def estimate_margin_mle(
+    sx: LpSketch,
+    sy: LpSketch,
+    cfg: SketchConfig,
+    *,
+    newton_steps: int = 2,
+    clip: bool = False,
+) -> jax.Array:
+    """Margin-MLE estimator (Lemma 4), for either projection strategy.
+
+    The paper analyzes the alternative strategy but recommends the same cubic
+    under the basic strategy in practice (§2.3); both are supported.
+    """
+    p, k = cfg.p, cfg.k
+    d = sx.norm_pp(p) + sy.norm_pp(p)
+    for a_ord, c_ord, coef in interaction_orders(p):
+        u, v = _uv(sx, sy, cfg, m=c_ord, a=a_ord, c=c_ord)
+        t = jnp.sum(u * v, axis=-1)
+        nu = jnp.sum(u * u, axis=-1)
+        nv = jnp.sum(v * v, axis=-1)
+        Mx = sx.moments[..., a_ord - 1]
+        My = sy.moments[..., c_ord - 1]
+        a_hat = margin_mle_root(t, nu, nv, Mx, My, k, newton_steps)
+        d = d + coef * a_hat
+    return jnp.maximum(d, 0.0) if clip else d

@@ -1,0 +1,101 @@
+"""Random projection families (paper §2.1 / §4).
+
+Three families, all zero-mean unit-variance with fourth moment ``s``:
+
+- ``normal``:     r ~ N(0, 1),                    s = 3   (paper §2)
+- ``uniform``:    r ~ Uniform(-sqrt(3), sqrt(3)), s = 9/5 (paper §4)
+- ``threepoint``: r = sqrt(s) * {+1 w.p. 1/(2s); 0 w.p. 1-1/s; -1 w.p. 1/(2s)},
+                  s >= 1 — the sparse sub-Gaussian family of Achlioptas
+                  (s = 3 gives the classic {+-sqrt(3), 0} projection).
+
+R is never required to be materialized at full (D, k): ``projection_block``
+derives any (row-block, k) tile from a counter-based PRNG key, so distributed
+shards and Pallas kernel tiles regenerate exactly the same R tile from
+(seed, block index) — the paper's small-space property, kept on device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ProjectionSpec", "fourth_moment", "projection_block", "projection_matrix"]
+
+_FAMILIES = ("normal", "uniform", "threepoint")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectionSpec:
+    """Which projection family to draw R from.
+
+    Attributes:
+      family: one of ``normal`` / ``uniform`` / ``threepoint``.
+      s: fourth moment for ``threepoint`` (ignored otherwise; must be >= 1).
+      dtype: dtype of the generated R entries.
+      block_d: row-block size used when streaming over the D axis.
+    """
+
+    family: str = "normal"
+    s: float = 3.0
+    dtype: jnp.dtype = jnp.float32
+    block_d: int = 2048
+
+    def __post_init__(self):
+        if self.family not in _FAMILIES:
+            raise ValueError(f"unknown projection family {self.family!r}")
+        if self.family == "threepoint" and self.s < 1.0:
+            raise ValueError("three-point SubG(s) requires s >= 1")
+
+
+def fourth_moment(spec: ProjectionSpec) -> float:
+    """E[r^4] = s for the family (enters the Lemma 6 variance)."""
+    return {"normal": 3.0, "uniform": 9.0 / 5.0, "threepoint": float(spec.s)}[
+        spec.family
+    ]
+
+
+def _draw(key: jax.Array, shape, spec: ProjectionSpec) -> jax.Array:
+    if spec.family == "normal":
+        return jax.random.normal(key, shape, spec.dtype)
+    if spec.family == "uniform":
+        r = jax.random.uniform(
+            key, shape, spec.dtype, minval=-jnp.sqrt(3.0), maxval=jnp.sqrt(3.0)
+        )
+        return r
+    # three-point SubG(s): sqrt(s) * sign w.p. 1/(2s) each, 0 w.p. 1 - 1/s
+    s = jnp.asarray(spec.s, spec.dtype)
+    u = jax.random.uniform(key, shape, spec.dtype)
+    sign = jnp.where(u < 1.0 / (2.0 * s), -1.0, jnp.where(u < 1.0 / s, 1.0, 0.0))
+    return jnp.sqrt(s) * sign.astype(spec.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "k", "spec"))
+def projection_block(
+    key: jax.Array, block_index: jax.Array, block_rows: int, k: int, spec: ProjectionSpec
+) -> jax.Array:
+    """The (block_rows, k) tile of R covering rows [block_index*block_rows, ...).
+
+    Deterministic in (key, block_index): every shard / kernel tile regenerates
+    the same R rows without storing R.
+    """
+    bkey = jax.random.fold_in(key, block_index)
+    return _draw(bkey, (block_rows, k), spec)
+
+
+def projection_matrix(
+    key: jax.Array, D: int, k: int, spec: Optional[ProjectionSpec] = None
+) -> jax.Array:
+    """Materialize a full (D, k) R, assembled from the same per-block stream.
+
+    Requires D % block_d == 0 or D < block_d (pads then slices). Only used by
+    small-scale reference paths and tests; production paths stream blocks.
+    """
+    spec = spec or ProjectionSpec()
+    bd = min(spec.block_d, D)
+    nblocks = -(-D // bd)
+    blocks = [projection_block(key, i, bd, k, spec) for i in range(nblocks)]
+    return jnp.concatenate(blocks, axis=0)[:D]

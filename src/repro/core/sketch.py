@@ -1,0 +1,170 @@
+"""Power sketches for even-p l_p distance estimation (paper §2.1, §2.2, §3).
+
+Given a row x in R^D, the sketch holds k-dimensional projections of the power
+vectors x^1 ... x^{p-1} plus the exact even power moments (one linear scan).
+
+Two strategies, exactly as in the paper:
+
+- ``basic``:       one R for every order;  U[j-1] = (x^j)^T R           (p-1 vectors)
+- ``alternative``: term m = 1..p-1 gets its own independent R^(m);
+                   Ua[m-1] = (x^{p-m})^T R^(m)   (row acting as "x"),
+                   Ub[m-1] = (x^m)^T R^(m)       (row acting as "y").
+
+Estimates between two rows only need sketches built with the *same*
+(key, config); the streamed, counter-based R tiles guarantee that across
+shards, hosts, and restarts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .decomposition import interaction_orders, power_moments
+from .projections import ProjectionSpec, projection_block
+
+__all__ = ["SketchConfig", "LpSketch", "sketch", "sketch_block_contrib"]
+
+_BASIC_MATRIX_ID = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchConfig:
+    """Static configuration of an l_p sketch.
+
+    Attributes:
+      p: even distance order (4, 6, 8, ...).
+      k: sketch width (number of projection samples).
+      strategy: ``basic`` (one R) or ``alternative`` (p-1 independent R's).
+      projection: the R family (normal / uniform / threepoint SubG(s)).
+      block_d: streaming block over the D axis; R tiles are (block_d, k).
+    """
+
+    p: int = 4
+    k: int = 64
+    strategy: str = "basic"
+    projection: ProjectionSpec = dataclasses.field(default_factory=ProjectionSpec)
+    block_d: int = 2048
+
+    def __post_init__(self):
+        if self.p < 4 or self.p % 2:
+            raise ValueError(f"p must be even and >= 4, got {self.p}")
+        if self.strategy not in ("basic", "alternative"):
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+
+    @property
+    def num_orders(self) -> int:
+        return self.p - 1
+
+    @property
+    def vectors_per_row(self) -> int:
+        return self.p - 1 if self.strategy == "basic" else 2 * (self.p - 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LpSketch:
+    """Sketch of n rows.
+
+    U:  basic: (n, p-1, k), U[:, j-1] = (x^j)^T R.
+        alternative: (n, 2(p-1), k) = [Ua | Ub] stacked on axis 1;
+        Ua[:, m-1] = (x^{p-m})^T R^(m), Ub[:, m-1] = (x^m)^T R^(m).
+    moments: (n, p-1) even moments, col j-1 = sum_i x_i^{2j}.
+    """
+
+    U: jax.Array
+    moments: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.U.shape[0]
+
+    def norm_pp(self, p: int) -> jax.Array:
+        """||x||_p^p per row."""
+        return self.moments[..., p // 2 - 1]
+
+    def row(self, i) -> "LpSketch":
+        return LpSketch(self.U[i][None], self.moments[i][None])
+
+
+def _matrix_key(key: jax.Array, matrix_id: int) -> jax.Array:
+    return jax.random.fold_in(key, matrix_id)
+
+
+def _powers(xb: jax.Array, p: int) -> jax.Array:
+    """(n, p-1, bd) stack of x^1..x^{p-1} for a (n, bd) block."""
+    pw = [xb]
+    for _ in range(p - 2):
+        pw.append(pw[-1] * xb)
+    return jnp.stack(pw, axis=1)
+
+
+def sketch_block_contrib(
+    xb: jax.Array, block_index: jax.Array, key: jax.Array, cfg: SketchConfig
+) -> jax.Array:
+    """Contribution of one D-block (n, block_d) to the projection part of the
+    sketch: (n, num_vectors, k).  Summing over all blocks gives ``LpSketch.U``.
+
+    This is also the reference semantics the Pallas ``power_project`` kernel
+    implements (see kernels/power_project/ref.py).
+    """
+    p, k = cfg.p, cfg.k
+    pw = _powers(xb.astype(cfg.projection.dtype), p)  # (n, p-1, bd)
+    if cfg.strategy == "basic":
+        R = projection_block(_matrix_key(key, _BASIC_MATRIX_ID), block_index,
+                             xb.shape[-1], k, cfg.projection)
+        return jnp.einsum("njd,dk->njk", pw, R)
+    # alternative: term m uses R^(m) for both roles
+    ua, ub = [], []
+    for a, c, _ in interaction_orders(p):  # a = p-m, c = m
+        m = c
+        R = projection_block(_matrix_key(key, m), block_index,
+                             xb.shape[-1], k, cfg.projection)
+        ua.append(pw[:, a - 1] @ R)
+        ub.append(pw[:, c - 1] @ R)
+    return jnp.stack(ua + ub, axis=1)
+
+
+@partial(jax.jit, static_argnames=("cfg", "block_offset_static"))
+def _sketch_dense(
+    X: jax.Array, key: jax.Array, cfg: SketchConfig, block_offset_static: int = 0
+) -> LpSketch:
+    n, D = X.shape
+    bd = min(cfg.block_d, D)
+    pad = (-D) % bd
+    if pad:
+        X = jnp.pad(X, ((0, 0), (0, pad)))  # zeros are inert for powers/moments
+    nblocks = X.shape[1] // bd
+    Xb = X.reshape(n, nblocks, bd)
+
+    def body(acc, i):
+        contrib = sketch_block_contrib(Xb[:, i], block_offset_static + i, key, cfg)
+        return acc + contrib, None
+
+    nvec = cfg.vectors_per_row
+    U0 = jnp.zeros((n, nvec, cfg.k), cfg.projection.dtype)
+    U, _ = jax.lax.scan(body, U0, jnp.arange(nblocks))
+    return LpSketch(U=U, moments=power_moments(X, cfg.p))
+
+
+def sketch(
+    X: jax.Array,
+    key: jax.Array,
+    cfg: Optional[SketchConfig] = None,
+    *,
+    block_offset: int = 0,
+) -> LpSketch:
+    """Sketch the rows of X (n, D).
+
+    ``block_offset`` shifts the R block counter — used by distributed shards
+    that own columns [offset*block_d, ...) of the global matrix so every shard
+    draws its own slice of the *same* global R.
+    """
+    cfg = cfg or SketchConfig()
+    if X.ndim != 2:
+        raise ValueError(f"X must be (n, D), got {X.shape}")
+    return _sketch_dense(X, key, cfg, block_offset_static=block_offset)

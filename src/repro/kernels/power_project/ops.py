@@ -1,0 +1,53 @@
+"""Jitted public wrapper for the fused power+projection kernel.
+
+Chooses the Pallas kernel on TPU, interpret-mode Pallas when asked (tests),
+and integrates with the sketching API: ``sketch_via_kernel`` produces the
+same ``LpSketch`` as ``repro.core.sketch`` (same streamed R tiles)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decomposition import interaction_orders, power_moments
+from repro.core.projections import projection_matrix
+from repro.core.sketch import LpSketch, SketchConfig, _matrix_key
+
+from .kernel import power_project_call
+from .ref import power_project_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def power_project(X, R, powers, *, use_kernel: bool | None = None, interpret: bool | None = None):
+    """Dispatch between the Pallas kernel and the jnp reference."""
+    if use_kernel is None:
+        use_kernel = True
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_kernel:
+        return power_project_ref(X, R, tuple(powers))
+    return power_project_call(X, R, tuple(powers), interpret=interpret)
+
+
+def sketch_via_kernel(
+    X: jax.Array, key: jax.Array, cfg: SketchConfig, *, interpret: bool | None = None
+) -> LpSketch:
+    """LpSketch built by the fused kernel — same R stream as repro.core.sketch."""
+    n, D = X.shape
+    if cfg.strategy == "basic":
+        R = projection_matrix(_matrix_key(key, 0), D, cfg.k, cfg.projection)
+        powers = tuple(range(1, cfg.p))
+        U = power_project(X, R, powers, interpret=interpret)
+    else:
+        ua, ub = [], []
+        for a, c, _ in interaction_orders(cfg.p):
+            m = c
+            R = projection_matrix(_matrix_key(key, m), D, cfg.k, cfg.projection)
+            both = power_project(X, R, (a, c), interpret=interpret)
+            ua.append(both[:, 0])
+            ub.append(both[:, 1])
+        U = jnp.stack(ua + ub, axis=1)
+    return LpSketch(U=U.astype(cfg.projection.dtype), moments=power_moments(X, cfg.p))

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run (deliverable e): for every (arch x shape x mesh) cell,
+jit(step).lower(**input_specs).compile() on the production mesh, then record
+memory_analysis / cost_analysis / trip-corrected HLO roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_405b --shape decode_32k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all   (sequential, in-process)
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, TrainKnobs
+from repro.configs.registry import get_config, list_archs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.input_specs import input_shardings, input_specs
+from repro.launch.mesh import make_parallel, make_production_mesh
+from repro.launch.roofline import model_flops, roofline_terms
+from repro.launch.steps import (build_decode_step, build_prefill_step,
+                                build_sketch_step, build_train_step, opt_specs)
+from repro.models import build_model
+from repro.optim.adamw import OptState
+
+# per-arch knob overrides — the §Perf levers (baseline values recorded here)
+KNOBS = {
+    "default": TrainKnobs(),
+    "llama3_405b": TrainKnobs(microbatches=16, grad_accum_dtype="bfloat16",
+                              opt_state_dtype="bfloat16"),
+    "llama4_maverick_400b_a17b": TrainKnobs(microbatches=16,
+                                            grad_accum_dtype="bfloat16",
+                                            opt_state_dtype="bfloat16"),
+    "qwen2_vl_72b": TrainKnobs(microbatches=8),
+}
+
+
+def knobs_for(arch: str, overrides: dict | None = None) -> TrainKnobs:
+    k = KNOBS.get(arch, KNOBS["default"])
+    if overrides:
+        k = dataclasses.replace(k, **overrides)
+    return k
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic and cfg.family != "sketch":
+        return ("full-attention arch: 500k-token decode requires sub-quadratic "
+                "attention (DESIGN.md skip list)")
+    return None
+
+
+def _sharding_tree(mesh, spec_tree_):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree_,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             knob_overrides: dict | None = None, out_dir: str = "experiments/dryrun",
+             save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "mode": shape.mode}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        return _save(result, out_dir)
+
+    t0 = time.time()
+    knobs = knobs_for(arch, knob_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    par = make_parallel(mesh, knobs=knobs)
+    chips = mesh.size
+    result["knobs"] = {f.name: getattr(knobs, f.name)
+                       for f in dataclasses.fields(knobs)}
+
+    if cfg.family == "sketch":
+        from repro.configs.lpsketch_pairwise import SKETCH_BLOCK_D, SKETCH_K, SKETCH_P
+        step, scfg = build_sketch_step(par, p=SKETCH_P, k=SKETCH_K,
+                                       block_d=SKETCH_BLOCK_D)
+        specs = input_specs(cfg, shape)
+        shards = input_shardings(cfg, shape, mesh)
+        jitted = jax.jit(step, in_shardings=(shards["rows"], shards["corpus_B"],
+                                             shards["corpus_norms"], None))
+        lowered = jitted.lower(specs["rows"], specs["corpus_B"],
+                               specs["corpus_norms"],
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        args_label = "sketch_step"
+    else:
+        model = build_model(cfg, par, knobs)
+        pspecs = model.param_specs()
+        pshard = _sharding_tree(mesh, pspecs)
+        params_abs = model.abstract_params()
+        batch_specs = input_specs(cfg, shape)
+        batch_shard = input_shardings(cfg, shape, mesh)
+        if shape.mode == "train":
+            step, mb = build_train_step(model, knobs, shape)
+            result["microbatches"] = mb
+            oshard = OptState(m=pshard, v=pshard,
+                              count=NamedSharding(mesh, P()))
+            opt_dtype = (jnp.float32 if knobs.opt_state_dtype == "float32"
+                         else jnp.bfloat16)
+            opt_abs = OptState(
+                m=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, opt_dtype),
+                               params_abs),
+                v=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, opt_dtype),
+                               params_abs),
+                count=jax.ShapeDtypeStruct((), jnp.int32))
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, oshard, batch_shard, None),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_specs,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+            args_label = "train_step"
+        elif shape.mode == "prefill":
+            step = build_prefill_step(model, shape)
+            jitted = jax.jit(step, in_shardings=(pshard, batch_shard))
+            lowered = jitted.lower(params_abs, batch_specs)
+            args_label = "serve_step_prefill"
+        else:  # decode
+            step = build_decode_step(model, shape)
+            if cfg.family == "audio":
+                cache_abs, cspecs = model.cache_specs(
+                    shape.global_batch, shape.seq_len, shape.seq_len)
+            else:
+                cache_abs, cspecs = model.cache_specs(shape.global_batch,
+                                                      shape.seq_len)
+            cshard = _sharding_tree(mesh, cspecs)
+            jitted = jax.jit(step, in_shardings=(pshard, cshard, batch_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, batch_specs)
+            args_label = "serve_step_decode"
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)
+    if cfg.family == "sketch":
+        from repro.configs.lpsketch_pairwise import (CORPUS_ROWS, SKETCH_K,
+                                                     SKETCH_P)
+        D = shape.seq_len * 256
+        n = 4096
+        packed = (SKETCH_P - 1) * SKETCH_K
+        # useful work: (p-1) projections over D + moments + n x M pairwise
+        mflops = (2.0 * n * D * packed + 2.0 * n * D
+                  + 2.0 * n * CORPUS_ROWS * packed + 2.0 * n * n * packed)
+    else:
+        mflops = model_flops(cfg, shape)
+    rf = roofline_terms(cost.flops, cost.bytes, cost.collective_bytes, chips,
+                        mflops)
+    result.update(
+        status="ok",
+        step=args_label,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=dict(
+            argument_gb=ma.argument_size_in_bytes / 1e9,
+            output_gb=ma.output_size_in_bytes / 1e9,
+            alias_gb=ma.alias_size_in_bytes / 1e9,
+            temp_gb=ma.temp_size_in_bytes / 1e9,
+            peak_gb=(ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                     + ma.output_size_in_bytes - ma.alias_size_in_bytes) / 1e9,
+        ),
+        xla_cost_analysis=dict(flops=ca.get("flops", 0.0),
+                               bytes=ca.get("bytes accessed", 0.0)),
+        hlo_cost=dict(flops=cost.flops, bytes=cost.bytes,
+                      collective_bytes=cost.collective_bytes,
+                      collectives_by_type={k: v for k, v in cost.collectives.items()},
+                      collective_counts=dict(cost.collective_counts),
+                      unknown_trip_loops=cost.unknown_trip_loops),
+        roofline=rf,
+        param_count=cfg.param_count if cfg.family != "sketch" else 0,
+        active_param_count=(cfg.active_param_count
+                            if cfg.family != "sketch" else 0),
+    )
+    if save_hlo:
+        hlo_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.hlo")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        result["hlo_path"] = hlo_path
+    return _save(result, out_dir)
+
+
+def _save(result: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{result['arch']}__{result['shape']}__{result['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    status = result.get("status")
+    extra = ""
+    if status == "ok":
+        r = result["roofline"]
+        extra = (f" compile={result['compile_s']}s peak={result['memory']['peak_gb']:.1f}GB "
+                 f"dominant={r['dominant']} frac={r['roofline_fraction']:.3f}")
+    print(f"[dryrun] {result['arch']} x {result['shape']} x {result['mesh']}: "
+          f"{status}{extra}", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--knobs", default=None,
+                    help='JSON TrainKnobs overrides, e.g. {"microbatches": 4}')
+    args = ap.parse_args()
+    overrides = json.loads(args.knobs) if args.knobs else None
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                for mp in (False, True):
+                    try:
+                        run_cell(arch, shape, mp, overrides, args.out,
+                                 args.save_hlo)
+                    except Exception:
+                        traceback.print_exc()
+                        _save({"arch": arch, "shape": shape,
+                               "mesh": "pod2x16x16" if mp else "pod16x16",
+                               "status": "error",
+                               "error": traceback.format_exc()[-2000:]}, args.out)
+    else:
+        run_cell(args.arch, args.shape, args.multi_pod, overrides, args.out,
+                 args.save_hlo)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell — weak-type
+correct, shardable, zero allocation (dry-run contract, requirement e/f)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["input_specs", "input_shardings", "batch_axes"]
+
+
+def batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, act_dtype=jnp.bfloat16):
+    """dict of ShapeDtypeStructs for the step function's ``batch`` argument."""
+    B, S = shape.global_batch, shape.seq_len
+    E = cfg.d_model
+    if cfg.family == "sketch":
+        # paper workload: a block of new rows + the packed sketched corpus
+        from repro.configs.lpsketch_pairwise import (CORPUS_ROWS, SKETCH_K,
+                                                     SKETCH_P)
+        D = S * 256
+        n_rows = 4096
+        packed = (SKETCH_P - 1) * SKETCH_K
+        return {"rows": _sds((n_rows, D), jnp.float32),
+                "corpus_B": _sds((CORPUS_ROWS, packed), jnp.float32),
+                "corpus_norms": _sds((CORPUS_ROWS,), jnp.float32)}
+    if shape.mode == "train":
+        out = {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            out["tokens"] = _sds((B, S - cfg.num_patches), jnp.int32)
+            out["labels"] = _sds((B, S), jnp.int32)
+            out["patch_embeds"] = _sds((B, cfg.num_patches, E), act_dtype)
+        if cfg.family == "audio":
+            out["frames"] = _sds((B, S, E), act_dtype)
+        return out
+    if shape.mode == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            out["tokens"] = _sds((B, S - cfg.num_patches), jnp.int32)
+            out["patch_embeds"] = _sds((B, cfg.num_patches, E), act_dtype)
+        if cfg.family == "audio":
+            out["frames"] = _sds((B, S, E), act_dtype)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"token": _sds((B, 1), jnp.int32), "index": _sds((), jnp.int32)}
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """NamedShardings matching input_specs (batch over (pod, data))."""
+    bx = batch_axes(mesh)
+    # divisibility guard for tiny batches (long_500k has B=1)
+    bsz = 1
+    for a in bx:
+        bsz *= mesh.shape[a]
+    bspec = bx if (shape.global_batch % max(bsz, 1) == 0 and bsz > 1) else None
+    ns = lambda *spec: NamedSharding(mesh, P(*spec))
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if k == "index":
+            out[k] = ns()
+        elif k == "rows":
+            out[k] = ns("data", "model")
+        elif k == "corpus_B":
+            out[k] = ns("data", None)
+        elif k == "corpus_norms":
+            out[k] = ns("data")
+        else:
+            out[k] = ns(bspec, *([None] * (len(v.shape) - 1)))
+    return out

@@ -1,0 +1,26 @@
+"""Production meshes.  A FUNCTION (not a module constant) so importing this
+module never touches jax device state — required by the dry-run contract."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import TrainKnobs
+from repro.parallel.sharding import Parallel, ShardingRules
+
+__all__ = ["make_production_mesh", "make_parallel"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_parallel(mesh=None, *, knobs: TrainKnobs = TrainKnobs(),
+                  multi_pod: bool = False, constrain: bool = True) -> Parallel:
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules.default(sequence_parallel=knobs.sequence_parallel,
+                                  fsdp=knobs.fsdp)
+    return Parallel(mesh=mesh, rules=rules, constrain=constrain)

@@ -1,0 +1,54 @@
+"""Roofline terms from the dry-run artifacts (TPU v5e targets).
+
+  compute term    = per_chip_FLOPs / peak_FLOPs_per_chip
+  memory term     = per_chip_HBM_bytes / HBM_bw
+  collective term = per_chip_collective_bytes / ICI_link_bw
+
+The analyzer works on the per-device SPMD module, so per-chip numbers come
+out directly; multiplying by chip count recovers the spec's system-total
+formulation (identical ratio)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12     # bf16 / chip (v5e)
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / ICI link
+
+__all__ = ["roofline_terms", "model_flops", "PEAK_FLOPS", "HBM_BW", "LINK_BW"]
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6*N_active*tokens (train), 2*N_active*tokens (inference)."""
+    n = cfg.active_param_count
+    if shape.mode == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per row
+
+
+def roofline_terms(per_chip_flops: float, per_chip_bytes: float,
+                   per_chip_coll_bytes: float, chips: int,
+                   mflops: float) -> dict:
+    compute_t = per_chip_flops / PEAK_FLOPS
+    memory_t = per_chip_bytes / HBM_BW
+    coll_t = per_chip_coll_bytes / LINK_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound_t = max(compute_t, memory_t, coll_t)
+    useful_ratio = mflops / max(per_chip_flops * chips, 1.0)
+    # roofline fraction: useful model flops per second at the bound, vs peak
+    achievable = mflops / max(chips, 1) / max(bound_t, 1e-30)
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": mflops,
+        "hlo_flops_total": per_chip_flops * chips,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": achievable / PEAK_FLOPS,
+        "chips": chips,
+    }

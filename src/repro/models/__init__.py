@@ -1,0 +1,15 @@
+"""Model zoo: decoder LMs (dense/MoE/SSM/hybrid/VLM) + encoder-decoder."""
+
+from repro.configs.base import ModelConfig, TrainKnobs
+from repro.parallel.sharding import Parallel
+
+from .encdec import EncDecLM
+from .transformer import LM
+
+__all__ = ["build_model", "LM", "EncDecLM"]
+
+
+def build_model(cfg: ModelConfig, par: Parallel, knobs: TrainKnobs = TrainKnobs()):
+    if cfg.num_encoder_layers > 0:
+        return EncDecLM(cfg, par, knobs)
+    return LM(cfg, par, knobs)

@@ -1,0 +1,210 @@
+"""Encoder-decoder LM (seamless-m4t style): audio-frontend stub -> text.
+
+The speech frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings (B, S_enc, d_model) straight into the encoder.
+Positions are sinusoidal (NLLB/M4T lineage — no rotary), self-attention in
+the decoder is causal, cross-attention attends to the encoder memory.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainKnobs
+from repro.parallel.sharding import Parallel
+
+from . import layers as ll
+from .attention import attention, attn_desc, decode_attention
+from .layers import materialize, spec_tree
+
+__all__ = ["EncDecLM", "sinusoidal"]
+
+
+def sinusoidal(S: int, E: int, dtype) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(E // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * dim / E)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, par: Parallel, knobs: TrainKnobs = TrainKnobs()):
+        assert cfg.num_encoder_layers > 0
+        self.cfg, self.par, self.knobs = cfg, par, knobs
+
+    # ------------------------------------------------------------ params --
+    def _enc_block_desc(self):
+        cfg = self.cfg
+        E = cfg.d_model
+        return {"ln1": ll.norm_desc(E), "attn": attn_desc(cfg),
+                "ln2": ll.norm_desc(E), "mlp": ll.mlp_desc(E, cfg.d_ff, cfg.mlp_variant)}
+
+    def _dec_block_desc(self):
+        cfg = self.cfg
+        E = cfg.d_model
+        return {"ln1": ll.norm_desc(E), "self_attn": attn_desc(cfg),
+                "ln2": ll.norm_desc(E), "cross_attn": attn_desc(cfg),
+                "ln3": ll.norm_desc(E), "mlp": ll.mlp_desc(E, cfg.d_ff, cfg.mlp_variant)}
+
+    def param_desc(self):
+        cfg = self.cfg
+        d: dict[str, Any] = dict(ll.embed_desc(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings))
+        d["encoder"] = ll.stack_layers(self._enc_block_desc(), cfg.num_encoder_layers)
+        d["decoder"] = ll.stack_layers(self._dec_block_desc(), cfg.num_layers)
+        d["enc_norm"] = ll.norm_desc(cfg.d_model)
+        d["final_norm"] = ll.norm_desc(cfg.d_model)
+        return d
+
+    def init(self, key, dtype=None):
+        return materialize(self.param_desc(), key, dtype or self.cfg.activation_dtype)
+
+    def param_specs(self):
+        return spec_tree(self.param_desc(), self.par)
+
+    def abstract_params(self, dtype=None):
+        return ll.abstract(self.param_desc(), dtype or self.cfg.activation_dtype)
+
+    # ------------------------------------------------------------ encoder --
+    def encode(self, params, frame_embeds):
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        norm = ll.rmsnorm if cfg.norm == "rmsnorm" else ll.layernorm
+        B, S, E = frame_embeds.shape
+        x = frame_embeds.astype(cfg.activation_dtype) + sinusoidal(S, E, cfg.activation_dtype)
+        x = par.shard(x, ("batch", "seq", "embed"))
+
+        def block(x, w):
+            x = par.shard(x, ("batch", "seq", "embed"))
+            h = norm(x, w["ln1"], cfg.norm_eps)
+            x = x + attention(h, w["attn"], cfg, par, positions=None, causal=False,
+                              q_chunk=knobs.attn_q_chunk)
+            h = norm(x, w["ln2"], cfg.norm_eps)
+            return x + ll.mlp(h, w["mlp"], cfg.mlp_variant, par)
+
+        body = jax.checkpoint(block) if knobs.remat == "layer" else block
+        x, _ = jax.lax.scan(lambda c, w: (body(c, w), None), x, params["encoder"])
+        return norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ------------------------------------------------------------ decoder --
+    def _dec_block(self, x, w, memory, mode, cache=None, index=None):
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        norm = ll.rmsnorm if cfg.norm == "rmsnorm" else ll.layernorm
+        new_cache = {}
+        x = par.shard(x, ("batch", "seq", "embed"))
+        h = norm(x, w["ln1"], cfg.norm_eps)
+        if mode == "full":
+            x = x + attention(h, w["self_attn"], cfg, par, positions=None, causal=True,
+                              q_chunk=knobs.attn_q_chunk)
+        else:
+            out, ck, cv = decode_attention(h, w["self_attn"], cache["self_k"],
+                                           cache["self_v"], index, cfg, par)
+            new_cache.update(self_k=ck, self_v=cv)
+            x = x + out
+        h = norm(x, w["ln2"], cfg.norm_eps)
+        if mode == "full":
+            x = x + attention(h, w["cross_attn"], cfg, par, positions=None, causal=False,
+                              q_chunk=knobs.attn_q_chunk, kv_x=memory)
+        else:
+            out, _, _ = decode_attention(h, w["cross_attn"], cache["cross_k"],
+                                         cache["cross_v"], index, cfg, par,
+                                         update_cache=False, causal=False)
+            new_cache.update(cross_k=cache["cross_k"], cross_v=cache["cross_v"])
+            x = x + out
+        h = norm(x, w["ln3"], cfg.norm_eps)
+        x = x + ll.mlp(h, w["mlp"], cfg.mlp_variant, par)
+        return x, new_cache
+
+    def forward(self, params, frame_embeds, dec_tokens, *, return_hidden=False):
+        """Teacher-forced training forward: (B, S_dec, V) logits."""
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        norm = ll.rmsnorm if cfg.norm == "rmsnorm" else ll.layernorm
+        memory = self.encode(params, frame_embeds)
+        x = ll.embed_lookup(dec_tokens, params["embedding"], par)
+        x = x + sinusoidal(x.shape[1], cfg.d_model, x.dtype)
+
+        def block(x, w):
+            return self._dec_block(x, w, memory, "full")[0]
+
+        body = jax.checkpoint(block) if knobs.remat == "layer" else block
+        x, _ = jax.lax.scan(lambda c, w: (body(c, w), None), x, params["decoder"])
+        x = norm(x, params["final_norm"], cfg.norm_eps)
+        if return_hidden:
+            return x
+        return ll.unembed_logits(x, params, cfg.tie_embeddings, par)
+
+    # ---------------------------------------------------------- serving --
+    def init_cache(self, B, S_max_dec, S_enc, dtype=None, abstract=False):
+        cfg = self.cfg
+        dtype = dtype or cfg.activation_dtype
+        KV, hd, L = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+        mk = (lambda s: jax.ShapeDtypeStruct(s, dtype)) if abstract else (
+            lambda s: jnp.zeros(s, dtype))
+        cache = {
+            "self_k": mk((L, B, S_max_dec, KV, hd)),
+            "self_v": mk((L, B, S_max_dec, KV, hd)),
+            "cross_k": mk((L, B, S_enc, KV, hd)),
+            "cross_v": mk((L, B, S_enc, KV, hd)),
+        }
+        lg = ("layers", "batch", "decode_seq", "kv_heads", "head_dim")
+        logical = {k: lg for k in cache}
+        return cache, logical
+
+    def cache_specs(self, B, S_max_dec, S_enc):
+        cache, logical = self.init_cache(B, S_max_dec, S_enc, abstract=True)
+        specs = {k: self.par.act_spec(logical[k], v.shape) for k, v in cache.items()}
+        return cache, specs
+
+    def prefill(self, params, frame_embeds, dec_tokens, S_max_dec):
+        """Encode + teacher-forced decoder pass that fills the decode cache."""
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        norm = ll.rmsnorm if cfg.norm == "rmsnorm" else ll.layernorm
+        memory = self.encode(params, frame_embeds)
+        B, S_dec = dec_tokens.shape
+        x = ll.embed_lookup(dec_tokens, params["embedding"], par)
+        x = x + sinusoidal(S_dec, cfg.d_model, x.dtype)
+        from .attention import _qkv
+
+        def block(x, w):
+            x = par.shard(x, ("batch", "seq", "embed"))
+            h = norm(x, w["ln1"], cfg.norm_eps)
+            _, k_self, v_self = _qkv(h, w["self_attn"], cfg, par, None)
+            x = x + attention(h, w["self_attn"], cfg, par, positions=None,
+                              causal=True, q_chunk=knobs.attn_q_chunk)
+            h = norm(x, w["ln2"], cfg.norm_eps)
+            _, k_cross, v_cross = _qkv(memory, w["cross_attn"], cfg, par, None)
+            x = x + attention(h, w["cross_attn"], cfg, par, positions=None,
+                              causal=False, q_chunk=knobs.attn_q_chunk, kv_x=memory)
+            h = norm(x, w["ln3"], cfg.norm_eps)
+            x = x + ll.mlp(h, w["mlp"], cfg.mlp_variant, par)
+            pad = S_max_dec - S_dec
+            kc = jnp.pad(k_self, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k_self
+            vc = jnp.pad(v_self, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v_self
+            cache = {"self_k": kc.astype(x.dtype), "self_v": vc.astype(x.dtype),
+                     "cross_k": k_cross.astype(x.dtype), "cross_v": v_cross.astype(x.dtype)}
+            return x, cache
+
+        body = jax.checkpoint(block) if knobs.remat == "layer" else block
+        x, cache = jax.lax.scan(lambda c, w: body(c, w), x, params["decoder"])
+        x = norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        return ll.unembed_logits(x, params, cfg.tie_embeddings, par), cache
+
+    def decode_step(self, params, token, cache, index):
+        cfg, par = self.cfg, self.par
+        norm = ll.rmsnorm if cfg.norm == "rmsnorm" else ll.layernorm
+        x = ll.embed_lookup(token, params["embedding"], par)
+        S_max = cache["self_k"].shape[2]
+        pe = sinusoidal(S_max, cfg.d_model, x.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            pe, jnp.minimum(index, S_max - 1), 1, axis=0)[None]
+
+        def body(x, ins):
+            w, c = ins
+            x, nc = self._dec_block(x, w, None, "decode", c, index)
+            return x, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+        x = norm(x, params["final_norm"], cfg.norm_eps)
+        return ll.unembed_logits(x, params, cfg.tie_embeddings, par), new_cache

@@ -1,0 +1,146 @@
+"""Shared layers + declarative parameter descriptions.
+
+A parameter tree is described as a nested dict whose leaves are
+``Param(shape, logical, init)``; ``materialize`` turns it into arrays and
+``spec_tree`` into PartitionSpecs via the Parallel rules — one description,
+both uses, so sharding can never drift from the actual shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import Parallel
+
+__all__ = [
+    "Param", "materialize", "spec_tree", "abstract", "rmsnorm", "layernorm",
+    "mlp", "mlp_desc", "embed_desc", "norm_desc",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: tuple
+    logical: tuple
+    init: str = "normal"    # normal | zeros | ones | small
+    scale: float = 1.0
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def _init_leaf(p: Param, key, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    fan_in = p.shape[0] if len(p.shape) > 1 else max(p.shape[0], 1)
+    if len(p.shape) >= 3:
+        fan_in = int(jnp.prod(jnp.asarray(p.shape[:-1])) // p.shape[-1]) or p.shape[0]
+        fan_in = p.shape[0]
+    std = p.scale / math.sqrt(fan_in)
+    return std * jax.random.normal(key, p.shape, dtype)
+
+
+def materialize(desc, key, dtype=jnp.float32):
+    """Instantiate a nested Param description into arrays."""
+    leaves, treedef = jax.tree.flatten(desc, is_leaf=_is_param)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(p, k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(desc, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (for dry-run eval_shape-free param stand-ins)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), desc, is_leaf=_is_param
+    )
+
+
+def spec_tree(desc, par: Parallel):
+    """PartitionSpec tree aligned with the description."""
+    return jax.tree.map(
+        lambda p: par.param_spec(p.logical, p.shape), desc, is_leaf=_is_param
+    )
+
+
+def stack_layers(desc, n: int):
+    """Prepend a stacked layer dimension (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda p: Param((n, *p.shape), ("layers", *p.logical), p.init, p.scale),
+        desc, is_leaf=_is_param,
+    )
+
+
+# ---------------------------------------------------------------- layers ---
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean((x * x).astype(jnp.float32), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return out * (1.0 + scale.astype(x.dtype))
+
+
+def layernorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    out = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return out * (1.0 + scale.astype(x.dtype))
+
+
+def norm_desc(E: int) -> Param:
+    return Param((E,), ("norm",), "zeros")
+
+
+def mlp_desc(E: int, F: int, variant: str):
+    gated = variant in ("swiglu", "geglu")
+    d = {
+        "w_up": Param((E, F), ("embed", "ff")),
+        "w_down": Param((F, E), ("ff", "embed")),
+    }
+    if gated:
+        d["w_gate"] = Param((E, F), ("embed", "ff"))
+    return d
+
+
+def mlp(x, w, variant: str, par: Parallel):
+    w_up = par.use_weight(w["w_up"], ("embed", "ff"))
+    w_down = par.use_weight(w["w_down"], ("ff", "embed"))
+    h = x @ w_up
+    if variant == "swiglu":
+        h = h * jax.nn.sigmoid(x @ par.use_weight(w["w_gate"], ("embed", "ff")))
+    elif variant == "geglu":
+        h = h * jax.nn.gelu(x @ par.use_weight(w["w_gate"], ("embed", "ff")))
+    elif variant == "gelu":
+        h = jax.nn.gelu(h)
+    elif variant == "relu":
+        h = jax.nn.relu(h)
+    h = par.shard(h, ("batch", "seq", "ff"))
+    from repro.parallel.sharding import tp_out_project
+    return tp_out_project(par, h, w_down)
+
+
+def embed_desc(V: int, E: int, tie: bool):
+    d = {"embedding": Param((V, E), ("vocab", "embed"), scale=1.0)}
+    if not tie:
+        d["lm_head"] = Param((E, V), ("embed", "vocab"))
+    return d
+
+
+def embed_lookup(tokens, emb, par: Parallel):
+    from repro.models.embed_sharded import sharded_embed_lookup
+    x = sharded_embed_lookup(par, emb, tokens)
+    return par.shard(x, ("batch", "seq", "embed"))
+
+
+def unembed_logits(x, params, tie: bool, par: Parallel):
+    w = params["embedding"].T if tie else params["lm_head"]
+    w = par.use_weight(w, ("embed", "vocab"))
+    logits = x @ w
+    return par.shard(logits, ("batch", "seq", "vocab"))

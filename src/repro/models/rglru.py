@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_r x_t + b_r)           (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)           (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over the diagonal linear recurrence
+(O(S log S) depth, fully parallel over the lru width, which is sharded over
+``model``); decode is the one-step update.  The block wraps the LRU with the
+Griffin conv + GeLU-gated output branch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Parallel
+
+from .layers import Param
+
+__all__ = ["rglru_desc", "rglru_block", "rglru_decode_step", "init_rglru_cache"]
+
+_C = 8.0
+
+
+def rglru_desc(cfg: ModelConfig):
+    E, L = cfg.d_model, cfg.lru_width
+    cw = cfg.ssm_conv
+    return {
+        "in_x": Param((E, L), ("embed", "lru")),
+        "in_gate": Param((E, L), ("embed", "lru")),
+        "conv": Param((cw, L), ("conv", "lru")),
+        "w_r": Param((L, L), ("lru", None), scale=0.5),
+        "b_r": Param((L,), (None,), "zeros"),
+        "w_i": Param((L, L), ("lru", None), scale=0.5),
+        "b_i": Param((L,), (None,), "zeros"),
+        "lam": Param((L,), (None,), "ones"),
+        "out": Param((L, E), ("lru", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    return y, (xp[:, -(cw - 1):] if cw > 1 else None)
+
+
+def _gates(xb, w):
+    r = jax.nn.sigmoid((xb @ w["w_r"]).astype(jnp.float32) + w["b_r"])
+    i = jax.nn.sigmoid((xb @ w["w_i"]).astype(jnp.float32) + w["b_i"])
+    log_a = -_C * jax.nn.softplus(w["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xb.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_block(x, w, cfg: ModelConfig, par: Parallel, h0=None):
+    """x (B, S, E) -> (B, S, E).  h0 (B, L) optional initial state."""
+    xb = x @ par.use_weight(w["in_x"], ("embed", "lru"))
+    gate = x @ par.use_weight(w["in_gate"], ("embed", "lru"))
+    xb, _ = _causal_conv(xb, w["conv"])
+    xb = par.shard(xb, ("batch", "seq", "lru"))
+    a, b = _gates(xb, w)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = par.shard(h.astype(x.dtype), ("batch", "seq", "lru"))
+    out = h * jax.nn.gelu(gate)
+    out_w = par.use_weight(w["out"], ("lru", "embed"))
+    return par.shard(out @ out_w, ("batch", "seq", "embed"))
+
+
+def init_rglru_cache(cfg: ModelConfig, n_layers: int, B: int, dtype):
+    cw = cfg.ssm_conv
+    return {
+        "h": jnp.zeros((n_layers, B, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((n_layers, B, cw - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_cache_logical():
+    return {
+        "h": ("layers", "batch", "lru"),
+        "conv": ("layers", "batch", None, "lru"),
+    }
+
+
+def rglru_decode_step(x1, w, cache, cfg: ModelConfig, par: Parallel):
+    """One token.  cache: {"h": (B, L), "conv": (B, cw-1, L)} (layer-sliced)."""
+    xb = x1 @ par.use_weight(w["in_x"], ("embed", "lru"))
+    gate = x1 @ par.use_weight(w["in_gate"], ("embed", "lru"))
+    xb, conv_state = _causal_conv(xb, w["conv"], cache["conv"])
+    a, b = _gates(xb[:, 0], w)
+    h = a * cache["h"] + b
+    out = (h.astype(x1.dtype) * jax.nn.gelu(gate[:, 0]))[:, None, :]
+    out_w = par.use_weight(w["out"], ("lru", "embed"))
+    out = par.shard(out @ out_w, ("batch", "seq", "embed"))
+    return out, {"h": h, "conv": conv_state}

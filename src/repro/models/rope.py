@@ -1,0 +1,67 @@
+"""Rotary embeddings: standard RoPE and Qwen2-VL M-RoPE (3-section)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope", "apply_mrope", "mrope_positions"]
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x, sin, cos):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B, S, H, hd); positions (B, S) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    return _rotate(x, sin, cos)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, theta: float, sections: tuple[int, ...]
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions3 (3, B, S): (temporal, height, width) position ids.  The hd/2
+    frequency slots are split into ``sections`` (summing to hd/2); each section
+    rotates by its own position stream.  Text tokens carry identical t/h/w
+    ids, reducing exactly to standard RoPE.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    assert sum(sections) == hd // 2, (sections, hd)
+    ang_all = positions3[..., None].astype(jnp.float32) * freqs  # (3, B, S, hd/2)
+    parts, start = [], 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i % 3, :, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, hd/2)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    return _rotate(x, sin, cos)
+
+
+def mrope_positions(B: int, S: int, num_patches: int, grid: int) -> jax.Array:
+    """Synthetic (3, B, S) ids: a (grid x grid) image then text (stub frontend)."""
+    t = jnp.zeros((num_patches,), jnp.int32)
+    h = jnp.repeat(jnp.arange(grid), grid)[:num_patches]
+    w = jnp.tile(jnp.arange(grid), grid)[:num_patches]
+    # text ids continue at the raw sequence index so a decode step at cache
+    # index i uses exactly position i (t = h = w) — see attention._qkv
+    text = jnp.arange(num_patches, S, dtype=jnp.int32)
+    pos3 = jnp.stack([
+        jnp.concatenate([t, text]),
+        jnp.concatenate([h, text]),
+        jnp.concatenate([w, text]),
+    ])
+    return jnp.broadcast_to(pos3[:, None, :], (3, B, S))

@@ -1,0 +1,185 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), TPU-friendly form.
+
+The SSD chunked algorithm: split the sequence into chunks of length Q;
+within a chunk the output is a (masked) quadratic attention-like product,
+across chunks a single recurrent state (nheads, head_dim, d_state) is passed
+through a lax.scan — O(S Q) work, O(S/Q) sequential steps, MXU-shaped
+matmuls throughout.  Decode is the pure recurrence (one state update/token).
+
+The head (d_inner) axis is sharded over ``model``: SSD is embarrassingly
+parallel across heads; B/C are per-group (ngroups=1 -> replicated).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Parallel
+
+from .layers import Param, rmsnorm
+
+__all__ = ["ssm_desc", "ssm_block", "ssm_decode_step", "init_ssm_cache"]
+
+
+def ssm_desc(cfg: ModelConfig):
+    E, din = cfg.d_model, cfg.d_inner
+    nh, ds, g, cw = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_conv
+    return {
+        "in_z": Param((E, din), ("embed", "ff")),
+        "in_x": Param((E, din), ("embed", "ff")),
+        "in_B": Param((E, g * ds), ("embed", "state")),
+        "in_C": Param((E, g * ds), ("embed", "state")),
+        "in_dt": Param((E, nh), ("embed", None)),
+        "conv_x": Param((cw, din), ("conv", "ff"), scale=1.0),
+        "conv_B": Param((cw, g * ds), ("conv", "state")),
+        "conv_C": Param((cw, g * ds), ("conv", "state")),
+        "A_log": Param((nh,), (None,), "zeros"),
+        "D": Param((nh,), (None,), "ones"),
+        "dt_bias": Param((nh,), (None,), "zeros"),
+        "norm": Param((din,), ("norm",), "zeros"),
+        "out": Param((din, E), ("ff", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """x (B, S, C), w (cw, C) depthwise causal conv.  state (B, cw-1, C) for
+    decode carries the last cw-1 inputs.  Returns (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh, dt, A, B_, C_, chunk: int, par: Parallel, h0=None):
+    """SSD core.  xh (B,S,nh,hd); dt (B,S,nh) >=0; A (nh,) <0; B_/C_ (B,S,ds).
+
+    Returns (y (B,S,nh,hd), h_final (B,nh,hd,ds)).
+    """
+    Bb, S, nh, hd = xh.shape
+    ds = B_.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    nC = xh.shape[1] // Q
+    xh = xh.reshape(Bb, nC, Q, nh, hd)
+    dt = dt.reshape(Bb, nC, Q, nh)
+    B_ = B_.reshape(Bb, nC, Q, ds)
+    C_ = C_.reshape(Bb, nC, Q, ds)
+
+    dA = dt * A[None, None, None, :]                 # (B,nC,Q,nh), <= 0
+    cums = jnp.cumsum(dA, axis=2)                    # within-chunk cumulative
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (B,nC,Q(i),Q(j),nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    xdt = xh * dt[..., None]                          # (B,nC,Q,nh,hd)
+    # intra-chunk (quadratic within Q): y_intra[i] = sum_j<=i C_i.B_j L_ij xdt_j
+    CB = jnp.einsum("bcqs,bcks->bcqk", C_, B_)        # (B,nC,Q,Q)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhd->bcqhd", CB, L, xdt)
+
+    # chunk-final states: H_c = sum_j exp(cums_Q - cums_j) B_j xdt_j
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)  # (B,nC,Q,nh)
+    Hc = jnp.einsum("bcks,bckh,bckhd->bchds", B_, decay_to_end, xdt)  # (B,nC,nh,hd,ds)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])           # (B,nC,nh)
+
+    def scanf(h, ins):
+        Hc_c, dec_c = ins
+        h_new = h * dec_c[:, :, None, None] + Hc_c
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, nh, hd, ds), jnp.float32)
+    hT, h_prevs = jax.lax.scan(
+        scanf, h0,
+        (jnp.moveaxis(Hc, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)              # (B,nC,nh,hd,ds) state entering chunk
+    # inter-chunk: y_inter[i] = C_i . (exp(cums_i) * h_prev)
+    decay_in = jnp.exp(cums)                            # (B,nC,Q,nh)
+    y_inter = jnp.einsum("bcqs,bcqh,bchds->bcqhd", C_, decay_in,
+                         h_prevs.astype(C_.dtype))
+    y = (y_intra + y_inter).reshape(Bb, nC * Q, nh, hd)[:, :S]
+    return y, hT
+
+
+def ssm_block(x, w, cfg: ModelConfig, par: Parallel, chunk: int = 256):
+    """Full-sequence Mamba-2 block: x (B,S,E) -> (B,S,E)."""
+    B, S, E = x.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = x @ par.use_weight(w["in_z"], ("embed", "ff"))
+    xi = x @ par.use_weight(w["in_x"], ("embed", "ff"))
+    Bi = x @ par.use_weight(w["in_B"], ("embed", "state"))
+    Ci = x @ par.use_weight(w["in_C"], ("embed", "state"))
+    dt = jax.nn.softplus((x @ w["in_dt"]).astype(jnp.float32) + w["dt_bias"])
+    xi, _ = _causal_conv(xi, w["conv_x"])
+    Bi, _ = _causal_conv(Bi, w["conv_B"])
+    Ci, _ = _causal_conv(Ci, w["conv_C"])
+    xi = par.shard(xi, ("batch", "seq", "ff"))
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, S, nh, hd)
+    y, _ = _ssd_chunked(xh, dt, A, Bi.astype(jnp.float32), Ci.astype(jnp.float32),
+                        chunk, par)
+    y = y + xh.astype(y.dtype) * w["D"][None, None, :, None]
+    y = y.reshape(B, S, nh * hd).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), w["norm"], cfg.norm_eps)
+    y = par.shard(y, ("batch", "seq", "ff"))
+    out_w = par.use_weight(w["out"], ("ff", "embed"))
+    return par.shard(y @ out_w, ("batch", "seq", "embed"))
+
+
+def init_ssm_cache(cfg: ModelConfig, n_layers: int, B: int, dtype):
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din, g, cw = cfg.d_inner, cfg.ssm_groups, cfg.ssm_conv
+    return {
+        "state": jnp.zeros((n_layers, B, nh, hd, ds), jnp.float32),
+        "conv_x": jnp.zeros((n_layers, B, cw - 1, din), dtype),
+        "conv_B": jnp.zeros((n_layers, B, cw - 1, g * ds), dtype),
+        "conv_C": jnp.zeros((n_layers, B, cw - 1, g * ds), dtype),
+    }
+
+
+def ssm_cache_logical():
+    return {
+        "state": ("layers", "batch", None, None, None),
+        "conv_x": ("layers", "batch", None, "ff"),
+        "conv_B": ("layers", "batch", None, None),
+        "conv_C": ("layers", "batch", None, None),
+    }
+
+
+def ssm_decode_step(x1, w, cache, cfg: ModelConfig, par: Parallel):
+    """One-token recurrence.  x1 (B,1,E); cache from init_ssm_cache (per layer,
+    without the leading layer axis).  Returns (y (B,1,E), new_cache)."""
+    B = x1.shape[0]
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = x1 @ par.use_weight(w["in_z"], ("embed", "ff"))
+    xi = x1 @ par.use_weight(w["in_x"], ("embed", "ff"))
+    Bi = x1 @ par.use_weight(w["in_B"], ("embed", "state"))
+    Ci = x1 @ par.use_weight(w["in_C"], ("embed", "state"))
+    dt = jax.nn.softplus((x1 @ w["in_dt"]).astype(jnp.float32) + w["dt_bias"])[:, 0]
+    xi, cx = _causal_conv(xi, w["conv_x"], cache["conv_x"])
+    Bi, cB = _causal_conv(Bi, w["conv_B"], cache["conv_B"])
+    Ci, cC = _causal_conv(Ci, w["conv_C"], cache["conv_C"])
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))
+    xh = xi[:, 0].reshape(B, nh, hd).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])                      # (B, nh)
+    h = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bs,bhd->bhds", dt, Bi[:, 0].astype(jnp.float32), xh)
+    y = jnp.einsum("bs,bhds->bhd", Ci[:, 0].astype(jnp.float32), h)
+    y = y + xh * w["D"][None, :, None]
+    y = y.reshape(B, 1, nh * hd).astype(x1.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), w["norm"], cfg.norm_eps)
+    out_w = par.use_weight(w["out"], ("ff", "embed"))
+    out = par.shard(y @ out_w, ("batch", "seq", "embed"))
+    return out, {"state": h, "conv_x": cx, "conv_B": cB, "conv_C": cC}

@@ -1,0 +1,448 @@
+"""Decoder-only LM assembler: grouped scan-over-layers for every family.
+
+A config is compiled into a *group pattern* — the smallest repeating block
+sequence — so heterogeneous stacks still scan:
+
+  dense / vlm            ["dense"] x L
+  moe  (interleave m)    (["dense"] * (m-1) + ["moe"]) x (L/m)
+  ssm  (mamba2)          ["ssm"] x L
+  hybrid (griffin)       ("rec","rec","attn") x (L//3)  + tail of L%3 blocks
+
+Parameters for each pattern position are stacked over groups (lax.scan),
+remat is applied per group body; tail blocks are unrolled.  The same grouped
+layout stacks the decode caches, so serve_step scans over groups too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainKnobs
+from repro.parallel.sharding import Parallel
+
+from . import layers as ll
+from .attention import attention, attn_desc, decode_attention
+from .layers import Param, materialize, spec_tree
+from .moe import moe_block, moe_desc
+from .rglru import (init_rglru_cache, rglru_block, rglru_cache_logical,
+                    rglru_decode_step, rglru_desc)
+from .rope import mrope_positions
+from .ssm import (init_ssm_cache, ssm_block, ssm_cache_logical,
+                  ssm_decode_step, ssm_desc)
+
+__all__ = ["LM", "group_pattern"]
+
+
+def group_pattern(cfg: ModelConfig) -> tuple[list[str], int, list[str]]:
+    """(pattern, n_groups, tail) — see module docstring."""
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        return ["ssm"], L, []
+    if cfg.block_pattern:
+        p = list(cfg.block_pattern)
+        return p, L // len(p), [p[i] for i in range(L - (L // len(p)) * len(p))]
+    if cfg.num_experts:
+        m = cfg.moe_interleave
+        if m == 1:
+            return ["moe"], L, []
+        assert L % m == 0, (L, m)
+        return ["dense"] * (m - 1) + ["moe"], L // m, []
+    return ["dense"], L, []
+
+
+def _norm(cfg):
+    return ll.rmsnorm if cfg.norm == "rmsnorm" else ll.layernorm
+
+
+class LM:
+    """Functional model: params are plain pytrees, methods are pure."""
+
+    def __init__(self, cfg: ModelConfig, par: Parallel, knobs: TrainKnobs = TrainKnobs()):
+        self.cfg = cfg
+        self.par = par
+        self.knobs = knobs
+        self.pattern, self.n_groups, self.tail = group_pattern(cfg)
+
+    # ------------------------------------------------------------ params --
+    def _block_desc(self, kind: str):
+        cfg = self.cfg
+        E = cfg.d_model
+        if kind == "ssm":
+            return {"ln1": ll.norm_desc(E), "ssm": ssm_desc(cfg)}
+        if kind == "rec":
+            return {"ln1": ll.norm_desc(E), "rec": rglru_desc(cfg),
+                    "ln2": ll.norm_desc(E), "mlp": ll.mlp_desc(E, cfg.d_ff, cfg.mlp_variant)}
+        if kind == "moe":
+            return {"ln1": ll.norm_desc(E), "attn": attn_desc(cfg),
+                    "ln2": ll.norm_desc(E), "moe": moe_desc(cfg)}
+        # dense / attn(local)
+        return {"ln1": ll.norm_desc(E), "attn": attn_desc(cfg),
+                "ln2": ll.norm_desc(E), "mlp": ll.mlp_desc(E, cfg.d_ff, cfg.mlp_variant)}
+
+    def param_desc(self):
+        cfg = self.cfg
+        d: dict[str, Any] = dict(ll.embed_desc(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings))
+        d["final_norm"] = ll.norm_desc(cfg.d_model)
+        d["blocks"] = {
+            f"pos{i}": ll.stack_layers(self._block_desc(kind), self.n_groups)
+            for i, kind in enumerate(self.pattern)
+        }
+        if self.tail:
+            d["tail"] = {f"t{i}": self._block_desc(kind) for i, kind in enumerate(self.tail)}
+        if cfg.frontend == "vision":
+            d["patch_proj"] = Param((cfg.d_model, cfg.d_model), ("embed_r", "embed"))
+        return d
+
+    def init(self, key, dtype=None):
+        return materialize(self.param_desc(), key, dtype or self.cfg.activation_dtype)
+
+    def param_specs(self):
+        return spec_tree(self.param_desc(), self.par)
+
+    def abstract_params(self, dtype=None):
+        return ll.abstract(self.param_desc(), dtype or self.cfg.activation_dtype)
+
+    # ------------------------------------------------------------- blocks --
+    def _block_fwd(self, kind, x, w, positions, mode):
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        norm = _norm(cfg)
+        aux = {}
+        x = par.shard(x, ("batch", "seq", "embed"))
+        h = norm(x, w["ln1"], cfg.norm_eps)
+        if kind == "ssm":
+            return x + ssm_block(h, w["ssm"], cfg, par, knobs.ssd_chunk), aux
+        if kind == "rec":
+            x = x + rglru_block(h, w["rec"], cfg, par)
+        else:
+            window = cfg.window if (kind == "attn" and cfg.window) else 0
+            x = x + attention(
+                h, w["attn"], cfg, par, positions=positions, causal=(mode != "encoder"),
+                window=window, q_chunk=knobs.attn_q_chunk)
+        h = norm(x, w["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            out, aux = moe_block(h, w["moe"], cfg, par)
+            x = x + out
+        else:
+            x = x + ll.mlp(h, w["mlp"], cfg.mlp_variant, par)
+        return x, aux
+
+    # ------------------------------------------------------------ forward --
+    def _embed_in(self, params, tokens, patch_embeds=None):
+        cfg, par = self.cfg, self.par
+        x = ll.embed_lookup(tokens, params["embedding"], par)
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+        if cfg.frontend == "vision" and patch_embeds is not None:
+            pp = self.par.use_weight(params["patch_proj"], ("embed_r", "embed"))
+            patches = patch_embeds.astype(x.dtype) @ pp
+            x = jnp.concatenate([patches, x], axis=1)
+            x = par.shard(x, ("batch", "seq", "embed"))
+        return x
+
+    def forward(self, params, tokens, *, positions=None, patch_embeds=None,
+                return_hidden=False):
+        """Full-sequence forward (training / encoder use)."""
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        x = self._embed_in(params, tokens, patch_embeds)
+        B, S = x.shape[:2]
+        if positions is None:
+            if cfg.rope_style == "mrope":
+                positions = mrope_positions(B, S, cfg.num_patches,
+                                            max(1, int(math.isqrt(max(cfg.num_patches, 1)))))
+            else:
+                positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def group_fn(x, gparams):
+            for i, kind in enumerate(self.pattern):
+                x, _ = self._block_fwd(kind, x, gparams[f"pos{i}"], positions, "train")
+            return x
+
+        body = group_fn
+        if knobs.remat == "layer":
+            body = jax.checkpoint(group_fn)
+
+        def scan_body(x, gparams):
+            return body(x, gparams), None
+
+        x, _ = jax.lax.scan(scan_body, x, params["blocks"])
+        for i, kind in enumerate(self.tail):
+            x, _ = self._block_fwd(kind, x, params["tail"][f"t{i}"], positions, "train")
+        x = _norm(cfg)(x, params["final_norm"], cfg.norm_eps)
+        if return_hidden:
+            return x
+        return ll.unembed_logits(x, params, cfg.tie_embeddings, par)
+
+    # -------------------------------------------------------------- cache --
+    def _cache_desc_block(self, kind, B, S_max, dtype):
+        """(ShapeDtypeStruct tree, logical tree) for one block's cache —
+        shape-only, NO allocation (the dry-run abstracts 70+GB caches)."""
+        cfg = self.cfg
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        sds = jax.ShapeDtypeStruct
+        if kind == "ssm":
+            nh, shd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            din, g, cw = cfg.d_inner, cfg.ssm_groups, cfg.ssm_conv
+            c = {"state": sds((1, B, nh, shd, ds), jnp.float32),
+                 "conv_x": sds((1, B, cw - 1, din), dtype),
+                 "conv_B": sds((1, B, cw - 1, g * ds), dtype),
+                 "conv_C": sds((1, B, cw - 1, g * ds), dtype)}
+            lg = ssm_cache_logical()
+        elif kind == "rec":
+            cw = cfg.ssm_conv
+            c = {"h": sds((1, B, cfg.lru_width), jnp.float32),
+                 "conv": sds((1, B, cw - 1, cfg.lru_width), dtype)}
+            lg = rglru_cache_logical()
+        else:
+            S = min(cfg.window, S_max) if (kind == "attn" and cfg.window) else S_max
+            seq_name = "seq_kv" if (kind == "attn" and cfg.window) else "decode_seq"
+            c = {"k": sds((1, B, S, KV, hd), dtype),
+                 "v": sds((1, B, S, KV, hd), dtype)}
+            lg = {"k": ("layers", "batch", seq_name, "kv_heads", "head_dim"),
+                  "v": ("layers", "batch", seq_name, "kv_heads", "head_dim")}
+        return c, lg
+
+    def init_cache(self, B, S_max, dtype=None, abstract=False):
+        """Stacked decode caches: {"pos<i>": tree, ...} (+ "tail<i>")."""
+        dtype = dtype or self.cfg.activation_dtype
+        cache, logical = {}, {}
+        for i, kind in enumerate(self.pattern):
+            c, lg = self._cache_desc_block(kind, B, S_max, dtype)
+            c = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct((self.n_groups, *a.shape[1:]),
+                                               a.dtype), c)
+            cache[f"pos{i}"], logical[f"pos{i}"] = c, lg
+        for i, kind in enumerate(self.tail):
+            c, lg = self._cache_desc_block(kind, B, S_max, dtype)
+            cache[f"tail{i}"] = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), c)
+            logical[f"tail{i}"] = jax.tree.map(
+                lambda l: tuple(l[1:]), lg, is_leaf=lambda l: isinstance(l, tuple))
+        if not abstract:
+            cache = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), cache)
+        return cache, logical
+
+    def cache_specs(self, B, S_max):
+        cache, logical = self.init_cache(B, S_max, abstract=True)
+        specs = {}
+        for name, tree in cache.items():
+            lg = logical[name]
+            specs[name] = jax.tree.map(
+                lambda a, l: self.par.act_spec(l, a.shape), tree, lg,
+                is_leaf=lambda l: isinstance(l, jax.ShapeDtypeStruct))
+        return cache, specs
+
+    def _block_decode(self, kind, x1, w, c, index):
+        cfg, par = self.cfg, self.par
+        norm = _norm(cfg)
+        h = norm(x1, w["ln1"], cfg.norm_eps)
+        if kind == "ssm":
+            out, c = ssm_decode_step(h, w["ssm"], c, cfg, par)
+            return x1 + out, c
+        if kind == "rec":
+            out, c = rglru_decode_step(h, w["rec"], c, cfg, par)
+            x1 = x1 + out
+        else:
+            ring = bool(kind == "attn" and cfg.window)
+            out, ck, cv = decode_attention(
+                h, w["attn"], c["k"], c["v"], index, cfg, par, ring=ring)
+            c = {"k": ck, "v": cv}
+            x1 = x1 + out
+        h = norm(x1, w["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            out, _ = moe_block(h, w["moe"], cfg, par)
+            x1 = x1 + out
+        else:
+            x1 = x1 + ll.mlp(h, w["mlp"], cfg.mlp_variant, par)
+        return x1, c
+
+    def decode_step(self, params, token, cache, index):
+        """token (B, 1) int32; index scalar int32 — one new token for all rows.
+        Returns (logits (B, 1, V), new_cache)."""
+        cfg, par = self.cfg, self.par
+        x = ll.embed_lookup(token, params["embedding"], par)
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+
+        def group_fn(x, ins):
+            gparams, gcache = ins
+            new = {}
+            for i, kind in enumerate(self.pattern):
+                x, new[f"pos{i}"] = self._block_decode(
+                    kind, x, gparams[f"pos{i}"], gcache[f"pos{i}"], index)
+            return x, new
+
+        gcaches = {k: v for k, v in cache.items() if k.startswith("pos")}
+        # strip the per-group leading axis inside scan via xs
+        x, new_caches = jax.lax.scan(group_fn, x, (params["blocks"], gcaches))
+        out_cache = dict(new_caches)
+        for i, kind in enumerate(self.tail):
+            x, out_cache[f"tail{i}"] = self._block_decode(
+                kind, x, params["tail"][f"t{i}"], cache[f"tail{i}"], index)
+        x = _norm(cfg)(x, params["final_norm"], cfg.norm_eps)
+        logits = ll.unembed_logits(x, params, cfg.tie_embeddings, par)
+        return logits, out_cache
+
+    # ------------------------------------------------------------ prefill --
+    def prefill(self, params, tokens, S_max, *, positions=None, patch_embeds=None):
+        """Full-context forward that also fills the decode cache.
+
+        Implemented as forward + cache construction per block; returns
+        (last_logits (B, 1, V), cache).  For the dry-run this is the
+        ``prefill_32k`` entry point.
+        """
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        x = self._embed_in(params, tokens, patch_embeds)
+        B, S = x.shape[:2]
+        if positions is None:
+            if cfg.rope_style == "mrope":
+                positions = mrope_positions(B, S, cfg.num_patches,
+                                            max(1, int(math.isqrt(max(cfg.num_patches, 1)))))
+            else:
+                positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def block_prefill(kind, x, w):
+            x, cache = self._block_fwd_cache(kind, x, w, positions, S_max)
+            return x, cache
+
+        def group_fn(x, gparams):
+            caches = {}
+            for i, kind in enumerate(self.pattern):
+                x, caches[f"pos{i}"] = block_prefill(kind, x, gparams[f"pos{i}"])
+            return x, caches
+
+        body = jax.checkpoint(group_fn) if knobs.remat == "layer" else group_fn
+        x, caches = jax.lax.scan(lambda c, w: body(c, w), x, params["blocks"])
+        out_cache = dict(caches)
+        for i, kind in enumerate(self.tail):
+            x, out_cache[f"tail{i}"] = block_prefill(kind, x, params["tail"][f"t{i}"])
+        x = _norm(cfg)(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = ll.unembed_logits(x, params, cfg.tie_embeddings, par)
+        return logits, out_cache
+
+    def _block_fwd_cache(self, kind, x, w, positions, S_max):
+        """Forward one block over the full sequence AND emit its decode cache."""
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        norm = _norm(cfg)
+        x = par.shard(x, ("batch", "seq", "embed"))
+        h = norm(x, w["ln1"], cfg.norm_eps)
+        if kind == "ssm":
+            y, cache = self._ssm_fwd_cache(h, w["ssm"])
+            return x + y, cache
+        if kind == "rec":
+            y, cache = self._rec_fwd_cache(h, w["rec"])
+            x = x + y
+        else:
+            window = cfg.window if (kind == "attn" and cfg.window) else 0
+            y, cache = self._attn_fwd_cache(h, w["attn"], positions, window, S_max)
+            x = x + y
+        h = norm(x, w["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            out, _ = moe_block(h, w["moe"], cfg, par)
+            x = x + out
+        else:
+            x = x + ll.mlp(h, w["mlp"], cfg.mlp_variant, par)
+        return x, cache
+
+    def _attn_fwd_cache(self, h, w, positions, window, S_max):
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        from .attention import _qkv  # shared projection + rope path
+        B, S, _ = h.shape
+        q, k, v = _qkv(h, w, cfg, par, positions)
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        rep = H // KV
+        kf = par.shard(jnp.repeat(k, rep, axis=2), ("batch", "seq", "heads", "head_dim"))
+        vf = par.shard(jnp.repeat(v, rep, axis=2), ("batch", "seq", "heads", "head_dim"))
+        scale = hd ** -0.5
+        qc = min(knobs.attn_q_chunk, S)
+        pad = (-S) % qc
+        qq = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+        kpos = jnp.arange(S)
+
+        def chunkf(_, i):
+            qi = jax.lax.dynamic_slice_in_dim(qq, i * qc, qc, axis=1)
+            s = jnp.einsum("bqhk,bshk->bhqs", qi, kf).astype(jnp.float32) * scale
+            if cfg.logit_softcap:
+                s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+            qpos = i * qc + jnp.arange(qc)
+            mask = qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None], s, -2.0e38)
+            p = jax.nn.softmax(s, -1).astype(vf.dtype)
+            return _, jnp.einsum("bhqs,bshk->bqhk", p, vf)
+
+        _, oc = jax.lax.scan(chunkf, 0, jnp.arange(qq.shape[1] // qc))
+        o = jnp.moveaxis(oc, 0, 1).reshape(B, S + pad, H, hd)[:, :S]
+        o = par.shard(o, ("batch", "seq", "heads", "head_dim"))
+        out = par.shard(jnp.einsum("bshk,hkd->bsd", o, w["wo"]),
+                        ("batch", "seq", "embed"))
+        if window:  # ring cache, slot j = latest position == j (mod Wd)
+            Wd = min(window, S_max)
+            take = min(Wd, S)
+            slots = jnp.arange(S - take, S) % Wd
+            kz = jnp.zeros((k.shape[0], Wd, *k.shape[2:]), h.dtype)
+            vz = jnp.zeros_like(kz)
+            cache = {"k": kz.at[:, slots].set(k[:, -take:].astype(h.dtype)),
+                     "v": vz.at[:, slots].set(v[:, -take:].astype(h.dtype))}
+        else:
+            padlen = S_max - S
+            kc = jnp.pad(k, ((0, 0), (0, padlen), (0, 0), (0, 0))) if padlen else k
+            vc = jnp.pad(v, ((0, 0), (0, padlen), (0, 0), (0, 0))) if padlen else v
+            cache = {"k": par.shard(kc.astype(h.dtype),
+                                    ("batch", "decode_seq", "kv_heads", "head_dim")),
+                     "v": par.shard(vc.astype(h.dtype),
+                                    ("batch", "decode_seq", "kv_heads", "head_dim"))}
+        return out, cache
+
+    def _ssm_fwd_cache(self, h, w):
+        cfg, par, knobs = self.cfg, self.par, self.knobs
+        from .ssm import _causal_conv, _ssd_chunked
+        B, S, E = h.shape
+        nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        z = h @ par.use_weight(w["in_z"], ("embed", "ff"))
+        xi0 = h @ par.use_weight(w["in_x"], ("embed", "ff"))
+        Bi0 = h @ par.use_weight(w["in_B"], ("embed", "state"))
+        Ci0 = h @ par.use_weight(w["in_C"], ("embed", "state"))
+        dt = jax.nn.softplus((h @ w["in_dt"]).astype(jnp.float32) + w["dt_bias"])
+        xi, cx = _causal_conv(xi0, w["conv_x"])
+        Bi, cB = _causal_conv(Bi0, w["conv_B"])
+        Ci, cC = _causal_conv(Ci0, w["conv_C"])
+        xi = par.shard(xi, ("batch", "seq", "ff"))
+        A = -jnp.exp(w["A_log"].astype(jnp.float32))
+        xh = xi.reshape(B, S, nh, hd)
+        y, hT = _ssd_chunked(xh, dt, A, Bi.astype(jnp.float32),
+                             Ci.astype(jnp.float32), knobs.ssd_chunk, par)
+        y = y + xh.astype(y.dtype) * w["D"][None, None, :, None]
+        y = y.reshape(B, S, nh * hd).astype(h.dtype)
+        y = ll.rmsnorm(y * jax.nn.silu(z), w["norm"], cfg.norm_eps)
+        out = par.shard(y @ par.use_weight(w["out"], ("ff", "embed")),
+                        ("batch", "seq", "embed"))
+        cache = {"state": hT, "conv_x": cx.astype(h.dtype),
+                 "conv_B": cB.astype(h.dtype), "conv_C": cC.astype(h.dtype)}
+        return out, cache
+
+    def _rec_fwd_cache(self, h, w):
+        cfg, par = self.cfg, self.par
+        from .rglru import _causal_conv, _gates
+        xb0 = h @ par.use_weight(w["in_x"], ("embed", "lru"))
+        gate = h @ par.use_weight(w["in_gate"], ("embed", "lru"))
+        xb, conv_state = _causal_conv(xb0, w["conv"])
+        xb = par.shard(xb, ("batch", "seq", "lru"))
+        a, b = _gates(xb, w)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+        out = (hseq.astype(h.dtype) * jax.nn.gelu(gate))
+        out = par.shard(out @ par.use_weight(w["out"], ("lru", "embed")),
+                        ("batch", "seq", "embed"))
+        cache = {"h": hseq[:, -1], "conv": conv_state.astype(h.dtype)}
+        return out, cache

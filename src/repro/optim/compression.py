@@ -1,0 +1,92 @@
+"""Random-projection gradient compression with error feedback — the paper's
+projection machinery applied to the distributed-optimization layer.
+
+Cross-pod gradient sync is the slowest collective at 512+ chips (DCN, not
+ICI).  Each 2D-reshaped gradient block G (m, n) is compressed to
+P = G R / sqrt(k) with a counter-based R (n, k) tile from
+``repro.core.projections`` (regenerated identically on every pod — nothing
+but P crosses pods), all-reduced, and decompressed as P R^T / sqrt(k).
+The decompression G R R^T / n is CONTRACTIVE (R R^T/n is a near-projector
+with k unit eigenvalues), so error feedback converges geometrically at rate
+~(1 - k/n); the raw single-step estimate has mean (k/n) G and EF re-injects
+the residual — the standard EF-SGD guarantee.  (The naive unbiased scaling
+G R R^T / k is NOT a contraction — ||R R^T/k|| ~ n/k — and provably diverges
+under EF; tests pin the contractive variant.)"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projections import ProjectionSpec, projection_block
+
+__all__ = ["CompressionConfig", "init_error_feedback", "compress_leaf",
+           "decompress_leaf", "compressed_mean"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    k: int = 32                   # projected width per block
+    min_size: int = 65536         # leaves smaller than this go uncompressed
+    spec: ProjectionSpec = dataclasses.field(
+        default_factory=lambda: ProjectionSpec(family="threepoint", s=3.0))
+
+
+def _as_2d(g: jax.Array):
+    if g.ndim == 0:
+        return g.reshape(1, 1)
+    n = g.shape[-1]
+    return g.reshape(-1, n)
+
+
+def _R(key, leaf_id: int, n: int, k: int, spec) -> jax.Array:
+    # one R tile per leaf, same on every pod (counter-based, never stored)
+    return projection_block(jax.random.fold_in(key, leaf_id), 0, n, k, spec)
+
+
+def compress_leaf(g, key, leaf_id: int, cfg: CompressionConfig):
+    g2 = _as_2d(g.astype(jnp.float32))
+    if g.size < cfg.min_size or g2.shape[-1] < cfg.k:
+        return g.astype(jnp.float32)
+    n = g2.shape[-1]
+    R = _R(key, leaf_id, n, cfg.k, cfg.spec)
+    return (g2 @ R) / jnp.sqrt(float(n))
+
+
+def decompress_leaf(p, template, key, leaf_id: int, cfg: CompressionConfig):
+    if p.shape == template.shape or template.size < cfg.min_size or \
+            _as_2d(template).shape[-1] < cfg.k:
+        return p.reshape(template.shape)
+    n = _as_2d(template).shape[-1]
+    R = _R(key, leaf_id, n, cfg.k, cfg.spec)
+    return ((p @ R.T) / jnp.sqrt(float(n))).reshape(template.shape)
+
+
+def compressed_mean(grads, key, cfg: CompressionConfig, error_feedback,
+                    *, axis_name: str | None = None):
+    """Mean-reduce ``grads`` across ``axis_name`` via projection compression.
+
+    Returns (decompressed mean estimate, new error_feedback).  With
+    axis_name=None (tests / single host) the reduction is the identity and
+    the function exercises exactly the compress -> reduce -> decompress +
+    error-feedback path."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    ef_leaves = jax.tree_util.tree_flatten(error_feedback)[0]
+    out, new_ef = [], []
+    for i, (g, e) in enumerate(zip(leaves, ef_leaves)):
+        g_tot = g.astype(jnp.float32) + e.astype(jnp.float32)
+        p = compress_leaf(g_tot, key, i, cfg)
+        if axis_name is not None:
+            p = jax.lax.pmean(p, axis_name)
+        d = decompress_leaf(p, g_tot, key, i, cfg)
+        new_ef.append((g_tot - d).astype(e.dtype))
+        out.append(d.astype(g.dtype))
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            jax.tree_util.tree_unflatten(treedef, new_ef))
+
+
+def init_error_feedback(grads, dtype=jnp.float32):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, dtype), grads)

@@ -1,0 +1,69 @@
+"""Serving loops: batched autoregressive decode + the paper's KNN service."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LpSketch, SketchConfig, knn, sketch
+
+__all__ = ["generate", "SketchKnnService"]
+
+
+def generate(model, params, prompt_tokens: jax.Array, max_new: int,
+             *, s_max: Optional[int] = None, greedy: bool = True,
+             key=None, **prefill_kwargs):
+    """Batched greedy/sampled generation: prefill once, then decode steps.
+
+    prompt_tokens (B, S0) -> (B, S0 + max_new)."""
+    B, S0 = prompt_tokens.shape
+    s_max = s_max or (S0 + max_new)
+    logits, cache = model.prefill(params, prompt_tokens, s_max, **prefill_kwargs)
+    out = [prompt_tokens]
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    for t in range(max_new):
+        out.append(tok)
+        if t == max_new - 1:
+            break
+        logits, cache = model.decode_step(params, tok, cache,
+                                          jnp.int32(S0 + t))
+        if greedy or key is None:
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1])[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+@dataclasses.dataclass
+class SketchKnnService:
+    """The paper's headline application as a service: approximate l_p KNN
+    over a sketched corpus.  The corpus never needs its raw D-dim rows after
+    ingestion — only (p-1)k sketch dims + p-1 moments per row (O(nk) space)."""
+
+    cfg: SketchConfig
+    seed: int = 0
+
+    def __post_init__(self):
+        self.key = jax.random.key(self.seed)
+        self.corpus: LpSketch | None = None
+        self.n_ingested = 0
+
+    def ingest(self, rows: jax.Array):
+        sk = sketch(rows, self.key, self.cfg)
+        if self.corpus is None:
+            self.corpus = sk
+        else:
+            self.corpus = LpSketch(
+                U=jnp.concatenate([self.corpus.U, sk.U]),
+                moments=jnp.concatenate([self.corpus.moments, sk.moments]))
+        self.n_ingested += rows.shape[0]
+
+    def query(self, rows: jax.Array, top_k: int = 10, mle: bool = False):
+        if self.corpus is None:
+            raise RuntimeError("empty corpus")
+        qs = sketch(rows, self.key, self.cfg)
+        return knn(qs, self.corpus, self.cfg, top_k=top_k, mle=mle)

@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: tests run on the single real CPU device — the
+512-device XLA_FLAGS override belongs ONLY to launch/dryrun.py (and the
+subprocess-based distributed tests, which set it in their child env)."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)
+
+
+def uniform_rows(key, n, d, lo=0.0, hi=1.0):
+    return jax.random.uniform(jax.random.key(key), (n, d), minval=lo, maxval=hi)
+
+
+@pytest.fixture(scope="session")
+def xy_pair():
+    """A fixed non-negative (x, y) pair used across estimator tests."""
+    return uniform_rows(1, 1, 256), uniform_rows(2, 1, 256)
+
+
+@pytest.fixture(scope="session")
+def xy_signed():
+    return uniform_rows(3, 1, 256, -1.0, 1.0), uniform_rows(4, 1, 256, -1.0, 1.0)

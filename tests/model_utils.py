@@ -1,0 +1,47 @@
+"""Shared helpers for model-zoo tests (reduced configs, 1-device Parallel)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainKnobs, reduced
+from repro.configs.registry import get_config
+from repro.models import build_model
+from repro.parallel.sharding import Parallel, ShardingRules
+
+KNOBS = TrainKnobs(remat="none", attn_q_chunk=16, vocab_chunk=64, ssd_chunk=8)
+
+
+def tiny_parallel():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return Parallel(mesh=mesh, rules=ShardingRules.default(), constrain=False)
+
+
+def make(arch, **overrides):
+    cfg = reduced(get_config(arch), **overrides)
+    model = build_model(cfg, tiny_parallel(), KNOBS)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def sample_inputs(cfg, B=2, S=48, key=1):
+    k = jax.random.key(key)
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(k, (B, S, cfg.d_model), jnp.float32),
+            "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": jax.random.randint(k, (B, S - cfg.num_patches), 0, cfg.vocab_size),
+            "patches": jax.random.normal(k, (B, cfg.num_patches, cfg.d_model), jnp.float32),
+        }
+    return {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+
+
+def full_forward(cfg, model, params, inp):
+    if cfg.family == "audio":
+        return model.forward(params, inp["frames"], inp["tokens"])
+    if cfg.family == "vlm":
+        return model.forward(params, inp["tokens"], patch_embeds=inp["patches"])
+    return model.forward(params, inp["tokens"])

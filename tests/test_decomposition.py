@@ -1,0 +1,95 @@
+"""The exact even-p decomposition (paper §1.1) and its invariances."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    exact_lp_distance,
+    exact_lp_distance_decomposed,
+    exact_pairwise_lp,
+    interaction_orders,
+    lp_coefficients,
+    power_moments,
+)
+
+
+def test_coefficients_p4_p6():
+    assert lp_coefficients(4) == (1, -4, 6, -4, 1)
+    assert lp_coefficients(6) == (1, -6, 15, -20, 15, -6, 1)
+
+
+@pytest.mark.parametrize("p", [4, 6, 8, 10])
+def test_coefficients_sum_to_zero(p):
+    # sum_m (-1)^m C(p,m) = (1-1)^p = 0: d(x,x) = 0 exactly in the decomposition
+    assert sum(lp_coefficients(p)) == 0
+    assert all(c == (-1) ** m * math.comb(p, m) for m, c in enumerate(lp_coefficients(p)))
+
+
+@pytest.mark.parametrize("p", [4, 6])
+def test_interaction_orders_symmetric_coeffs(p):
+    orders = interaction_orders(p)
+    assert len(orders) == p - 1
+    coeffs = {m: c for a, m, c in orders}
+    for a, m, c in orders:
+        assert coeffs[p - m] == c  # c_m = c_{p-m}: pairwise symmetry of d_hat
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(-3, 3), min_size=2, max_size=32),
+    st.lists(st.integers(-3, 3), min_size=2, max_size=32),
+    st.sampled_from([4, 6]),
+)
+def test_decomposition_identity_exact_on_integers(xs, ys, p):
+    """On small-integer data fp32 arithmetic is exact: identity must be exact."""
+    d = min(len(xs), len(ys))
+    x = jnp.asarray(xs[:d], jnp.float32)
+    y = jnp.asarray(ys[:d], jnp.float32)
+    d1 = exact_lp_distance(x, y, p)
+    d2 = exact_lp_distance_decomposed(x, y, p)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6, atol=1e-4)
+
+
+@pytest.mark.parametrize("p", [4, 6, 8])
+def test_decomposition_identity_float(p):
+    x = jax.random.uniform(jax.random.key(0), (4, 128), minval=-1, maxval=1)
+    y = jax.random.uniform(jax.random.key(1), (4, 128), minval=-1, maxval=1)
+    np.testing.assert_allclose(
+        np.asarray(exact_lp_distance(x, y, p)),
+        np.asarray(exact_lp_distance_decomposed(x, y, p)),
+        rtol=5e-3,  # alternating-sign cancellation at fp32
+    )
+
+
+def test_pairwise_exact_matches_rowwise():
+    A = jax.random.uniform(jax.random.key(2), (5, 64))
+    B = jax.random.uniform(jax.random.key(3), (7, 64))
+    D = np.asarray(exact_pairwise_lp(A, B, 4))
+    for i in range(5):
+        for j in range(7):
+            np.testing.assert_allclose(
+                D[i, j], float(exact_lp_distance(A[i], B[j], 4)), rtol=1e-5
+            )
+
+
+def test_power_moments_columns():
+    x = jax.random.uniform(jax.random.key(4), (3, 100))
+    M = np.asarray(power_moments(x, 6))  # j = 1..5
+    xn = np.asarray(x, np.float64)
+    assert M.shape == (3, 5)
+    for j in range(1, 6):
+        np.testing.assert_allclose(M[:, j - 1], (xn ** (2 * j)).sum(-1), rtol=1e-5)
+
+
+def test_odd_p_rejected():
+    x = jnp.ones((2, 4))
+    with pytest.raises(ValueError):
+        exact_lp_distance(x, x, 3)
+    with pytest.raises(ValueError):
+        lp_coefficients(5)

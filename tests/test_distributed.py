@@ -1,0 +1,69 @@
+"""Distributed sketching == single-device sketching, bit-for-bit semantics.
+
+These run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the main pytest process keeps its single real device (per the launch-only
+rule for the device-count override)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_CHILD = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import (SketchConfig, sketch, sketch_sharded, pairwise_sharded,
+                            pairwise_distances, knn, knn_sharded)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    KEY = jax.random.key(17)
+    cfg = SketchConfig(p=4, k=32, strategy="basic", block_d=64)
+    X = jax.random.uniform(jax.random.key(1), (16, 256))
+
+    ref = sketch(X, KEY, cfg)
+    dist = sketch_sharded(X, KEY, cfg, mesh)
+    np.testing.assert_allclose(np.asarray(dist.U), np.asarray(ref.U), rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dist.moments), np.asarray(ref.moments), rtol=1e-5)
+    print("SKETCH_OK")
+
+    Dref = pairwise_distances(ref, None, cfg)
+    Ddist = pairwise_sharded(dist, cfg, mesh)
+    np.testing.assert_allclose(np.asarray(Ddist), np.asarray(Dref), rtol=2e-3, atol=1e-3)
+    print("PAIRWISE_OK")
+
+    Q = jax.random.uniform(jax.random.key(2), (4, 256))
+    sq = sketch(Q, KEY, cfg)
+    d0, i0 = knn(sq, ref, cfg, top_k=4)
+    d1, i1 = knn_sharded(sq, dist, cfg, mesh, top_k=4)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=2e-3, atol=1e-3)
+    print("KNN_OK")
+
+    # alternative strategy too
+    cfga = SketchConfig(p=4, k=32, strategy="alternative", block_d=64)
+    refa = sketch(X, KEY, cfga)
+    dista = sketch_sharded(X, KEY, cfga, mesh)
+    np.testing.assert_allclose(np.asarray(dista.U), np.asarray(refa.U), rtol=2e-4, atol=1e-5)
+    print("ALT_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_distributed_matches_single_device():
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", _CHILD], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stdout + res.stderr
+    for tag in ("SKETCH_OK", "PAIRWISE_OK", "KNN_OK", "ALT_OK"):
+        assert tag in res.stdout, res.stdout + res.stderr

@@ -1,0 +1,122 @@
+"""Estimator correctness: unbiasedness, Lemma variances, margin-MLE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SketchConfig,
+    estimate,
+    estimate_margin_mle,
+    exact_lp_distance,
+    margin_mle_root,
+    sketch,
+    variance_margin_mle,
+    variance_plain,
+)
+
+
+def _mc(x, y, cfg, n_mc, mle=False, seed0=1000):
+    out = []
+    est = estimate_margin_mle if mle else estimate
+    for i in range(n_mc):
+        kk = jax.random.key(seed0 + i)
+        out.append(float(est(sketch(x, kk, cfg), sketch(y, kk, cfg), cfg)[0]))
+    return np.array(out)
+
+
+@pytest.mark.parametrize("strategy", ["basic", "alternative"])
+def test_unbiased_and_variance_matches_lemma(xy_pair, strategy):
+    """Lemma 1 (basic) / Lemma 2 (alternative): E d_hat = d, Var = formula."""
+    x, y = xy_pair
+    k, n_mc = 64, 500
+    cfg = SketchConfig(p=4, k=k, strategy=strategy, block_d=64)
+    ests = _mc(x, y, cfg, n_mc)
+    true = float(exact_lp_distance(x[0], y[0], 4))
+    v = float(variance_plain(x[0], y[0], 4, k, strategy))
+    # mean within 4 stderr; MC variance within 30% (chi2 noise at n=500 ~ 9%)
+    assert abs(ests.mean() - true) < 4 * np.sqrt(v / n_mc)
+    assert abs(ests.var() - v) / v < 0.30
+
+
+def test_basic_beats_alternative_on_nonneg(xy_pair):
+    """Lemma 3 consequence: Var(basic) <= Var(alternative) on non-negative data."""
+    x, y = xy_pair
+    vb = float(variance_plain(x[0], y[0], 4, 64, "basic"))
+    va = float(variance_plain(x[0], y[0], 4, 64, "alternative"))
+    assert vb <= va
+
+
+def test_alternative_can_beat_basic_on_signed():
+    """Paper §2.2: all-negative x vs all-positive y flips the ordering."""
+    x = -jax.random.uniform(jax.random.key(1), (64,)) - 0.1
+    y = jax.random.uniform(jax.random.key(2), (64,)) + 0.1
+    vb = float(variance_plain(x, y, 4, 64, "basic"))
+    va = float(variance_plain(x, y, 4, 64, "alternative"))
+    assert vb >= va
+
+
+def test_margin_mle_reduces_variance(xy_pair):
+    x, y = xy_pair
+    k = 128
+    cfg = SketchConfig(p=4, k=k, strategy="basic", block_d=64)
+    plain = _mc(x, y, cfg, 300)
+    mle = _mc(x, y, cfg, 300, mle=True)
+    true = float(exact_lp_distance(x[0], y[0], 4))
+    assert ((mle - true) ** 2).mean() < 0.8 * ((plain - true) ** 2).mean()
+
+
+def test_margin_mle_matches_lemma4_asymptotics(xy_pair):
+    """Alternative-strategy MLE variance -> Lemma 4 formula as k grows."""
+    x, y = xy_pair
+    k, n_mc = 512, 300
+    cfg = SketchConfig(p=4, k=k, strategy="alternative", block_d=64)
+    mle = _mc(x, y, cfg, n_mc, mle=True)
+    v_asym = float(variance_margin_mle(x[0], y[0], 4, k))
+    assert abs(mle.var() - v_asym) / v_asym < 0.35
+
+
+def test_newton_solves_cubic():
+    """The returned root satisfies the Lemma-4 cubic to high relative accuracy."""
+    rng = np.random.default_rng(0)
+    k = 128
+    Mx, My = 37.0, 52.0
+    u = rng.normal(size=k) * np.sqrt(Mx)
+    v = rng.normal(size=k) * np.sqrt(My)
+    t, nu, nv = float(u @ v), float(u @ u), float(v @ v)
+    a = float(margin_mle_root(jnp.asarray(t), jnp.asarray(nu), jnp.asarray(nv),
+                              jnp.asarray(Mx), jnp.asarray(My), k, newton_steps=8))
+    f = a**3 - (a**2 / k) * t - (Mx * My / k) * t - a * Mx * My + (a / k) * (Mx * nv + My * nu)
+    scale = abs(a) ** 3 + Mx * My * max(abs(a), 1.0)
+    assert abs(f) / scale < 1e-4
+    assert abs(a) <= np.sqrt(Mx * My) + 1e-6
+
+
+def test_p6_estimator_unbiased(xy_pair):
+    """Lemma 5 setting: p=6 basic strategy."""
+    x, y = xy_pair
+    k, n_mc = 128, 400
+    cfg = SketchConfig(p=6, k=k, strategy="basic", block_d=64)
+    ests = _mc(x, y, cfg, n_mc)
+    true = float(exact_lp_distance(x[0], y[0], 6))
+    v = float(variance_plain(x[0], y[0], 6, k, "basic"))
+    assert abs(ests.mean() - true) < 4 * np.sqrt(v / n_mc)
+    assert abs(ests.var() - v) / v < 0.35
+
+
+def test_clip_only_improves():
+    """max(d_hat, 0) never increases squared error (true distances are >= 0)."""
+    x = jax.random.uniform(jax.random.key(11), (1, 64))
+    cfg = SketchConfig(p=4, k=8, strategy="basic", block_d=64)
+    true = float(exact_lp_distance(x[0], x[0] * 0.99, 4))
+    errs_c, errs_u = [], []
+    y = x * 0.99
+    for i in range(200):
+        kk = jax.random.key(i)
+        sx, sy = sketch(x, kk, cfg), sketch(y, kk, cfg)
+        u = float(estimate(sx, sy, cfg, clip=False)[0])
+        c = float(estimate(sx, sy, cfg, clip=True)[0])
+        errs_u.append((u - true) ** 2)
+        errs_c.append((c - true) ** 2)
+    assert np.mean(errs_c) <= np.mean(errs_u) + 1e-12

@@ -1,0 +1,134 @@
+"""The general variance oracle vs the paper's lemmas, transcribed verbatim."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import delta_basic_vs_alternative, variance_plain
+
+
+def _S(v, q):
+    return float((v.astype(np.float64) ** q).sum())
+
+
+def _T(x, y, a, c):
+    return float((x.astype(np.float64) ** a * y.astype(np.float64) ** c).sum())
+
+
+def lemma1_var(x, y, k):
+    """Var(d_hat_(4)), basic strategy, transcribed from Lemma 1."""
+    S, T = _S, _T
+    v = 36 / k * (S(x, 4) * S(y, 4) + T(x, y, 2, 2) ** 2)
+    v += 16 / k * (S(x, 6) * S(y, 2) + T(x, y, 3, 1) ** 2)
+    v += 16 / k * (S(x, 2) * S(y, 6) + T(x, y, 1, 3) ** 2)
+    delta = -48 / k * (S(x, 5) * S(y, 3) + T(x, y, 2, 1) * T(x, y, 3, 2))
+    delta += -48 / k * (S(x, 3) * S(y, 5) + T(x, y, 1, 2) * T(x, y, 2, 3))
+    delta += 32 / k * (S(x, 4) * S(y, 4) + T(x, y, 1, 1) * T(x, y, 3, 3))
+    return v + delta
+
+
+def lemma2_var(x, y, k):
+    """Var(d_hat_(4),a), alternative strategy, Lemma 2."""
+    v = 36 / k * (_S(x, 4) * _S(y, 4) + _T(x, y, 2, 2) ** 2)
+    v += 16 / k * (_S(x, 6) * _S(y, 2) + _T(x, y, 3, 1) ** 2)
+    v += 16 / k * (_S(x, 2) * _S(y, 6) + _T(x, y, 1, 3) ** 2)
+    return v
+
+
+def lemma5_var(x, y, k):
+    """Var(d_hat_(6)), basic strategy, Lemma 5 (incl. Delta_6)."""
+    S, T = _S, _T
+    v = 400 / k * (S(x, 6) * S(y, 6) + T(x, y, 3, 3) ** 2)
+    v += 225 / k * (S(x, 4) * S(y, 8) + T(x, y, 2, 4) ** 2)
+    v += 225 / k * (S(x, 8) * S(y, 4) + T(x, y, 4, 2) ** 2)
+    v += 36 / k * (S(x, 2) * S(y, 10) + T(x, y, 1, 5) ** 2)
+    v += 36 / k * (S(x, 10) * S(y, 2) + T(x, y, 5, 1) ** 2)
+    d6 = -600 * (S(x, 5) * S(y, 7) + T(x, y, 3, 4) * T(x, y, 2, 3))
+    d6 += -600 * (S(x, 7) * S(y, 5) + T(x, y, 3, 2) * T(x, y, 4, 3))
+    d6 += 240 * (S(x, 4) * S(y, 8) + T(x, y, 3, 5) * T(x, y, 1, 3))
+    d6 += 240 * (S(x, 8) * S(y, 4) + T(x, y, 3, 1) * T(x, y, 5, 3))
+    d6 += 450 * (S(x, 6) * S(y, 6) + T(x, y, 2, 2) * T(x, y, 4, 4))
+    d6 += -180 * (S(x, 3) * S(y, 9) + T(x, y, 2, 5) * T(x, y, 1, 4))
+    d6 += -180 * (S(x, 7) * S(y, 5) + T(x, y, 2, 1) * T(x, y, 5, 4))
+    d6 += -180 * (S(x, 5) * S(y, 7) + T(x, y, 4, 5) * T(x, y, 1, 2))
+    d6 += -180 * (S(x, 9) * S(y, 3) + T(x, y, 4, 1) * T(x, y, 5, 2))
+    d6 += 72 * (S(x, 6) * S(y, 6) + T(x, y, 1, 1) * T(x, y, 5, 5))
+    return v + d6 / k
+
+
+def lemma6_var(x, y, k, s):
+    """Var(d_hat_(4),s), basic strategy with SubG(s) projections, Lemma 6."""
+    S, T = _S, _T
+    v = 36 / k * (S(x, 4) * S(y, 4) + T(x, y, 2, 2) ** 2 + (s - 3) * T(x, y, 4, 4))
+    v += 16 / k * (S(x, 6) * S(y, 2) + T(x, y, 3, 1) ** 2 + (s - 3) * T(x, y, 6, 2))
+    v += 16 / k * (S(x, 2) * S(y, 6) + T(x, y, 1, 3) ** 2 + (s - 3) * T(x, y, 2, 6))
+    v += -48 / k * (S(x, 5) * S(y, 3) + T(x, y, 2, 1) * T(x, y, 3, 2) + (s - 3) * T(x, y, 5, 3))
+    v += -48 / k * (S(x, 3) * S(y, 5) + T(x, y, 1, 2) * T(x, y, 2, 3) + (s - 3) * T(x, y, 3, 5))
+    v += 32 / k * (S(x, 4) * S(y, 4) + T(x, y, 1, 1) * T(x, y, 3, 3) + (s - 3) * T(x, y, 4, 4))
+    return v
+
+
+def _pair(seed, signed=False):
+    lo = -1.0 if signed else 0.0
+    x = np.asarray(jax.random.uniform(jax.random.key(seed), (48,), minval=lo, maxval=1.0))
+    y = np.asarray(jax.random.uniform(jax.random.key(seed + 1), (48,), minval=lo, maxval=1.0))
+    return x, y
+
+
+@pytest.mark.parametrize("signed", [False, True])
+def test_oracle_matches_lemma1(signed):
+    x, y = _pair(10, signed)
+    np.testing.assert_allclose(
+        float(variance_plain(x, y, 4, 64, "basic")), lemma1_var(x, y, 64), rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("signed", [False, True])
+def test_oracle_matches_lemma2(signed):
+    x, y = _pair(20, signed)
+    np.testing.assert_allclose(
+        float(variance_plain(x, y, 4, 64, "alternative")), lemma2_var(x, y, 64), rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("signed", [False, True])
+def test_oracle_matches_lemma5(signed):
+    x, y = _pair(30, signed)
+    np.testing.assert_allclose(
+        float(variance_plain(x, y, 6, 64, "basic")), lemma5_var(x, y, 64), rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("s", [1.0, 1.8, 3.0, 10.0])
+def test_oracle_matches_lemma6(s):
+    x, y = _pair(40)
+    np.testing.assert_allclose(
+        float(variance_plain(x, y, 4, 64, "basic", s=s)), lemma6_var(x, y, 64, s),
+        rtol=1e-4,
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10_000))
+def test_lemma3_delta4_nonpositive_on_nonneg_data(seed):
+    """Property (Lemma 3): Delta_4 <= 0 whenever x, y >= 0."""
+    x, y = _pair(seed)
+    assert float(delta_basic_vs_alternative(x, y, 4, 64)) <= 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_delta6_nonpositive_on_nonneg_data(seed):
+    """The paper conjectures Delta_6 <= 0 for non-negative data (§3); our
+    oracle lets us check it empirically as a property test."""
+    x, y = _pair(seed)
+    assert float(delta_basic_vs_alternative(x, y, 6, 64)) <= 1e-6
+
+
+def test_opposite_signs_flip_delta4():
+    """Paper §2.2: all-negative x, all-positive y => Delta_4 >= 0."""
+    x = -np.abs(_pair(50)[0]) - 0.1
+    y = np.abs(_pair(52)[0]) + 0.1
+    assert float(delta_basic_vs_alternative(x, y, 4, 64)) >= 0.0

@@ -1,0 +1,60 @@
+"""Regenerate the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+per-cell JSONs.  Usage: PYTHONPATH=src python tools/make_experiments_tables.py"""
+
+import glob
+import json
+import sys
+
+
+def fmt_s(x):
+    return f"{x:.3g}"
+
+
+def main(out_dir="experiments/dryrun"):
+    cells = [json.load(open(f)) for f in sorted(glob.glob(f"{out_dir}/*.json"))]
+    by = {(c["arch"], c["shape"], c["mesh"]): c for c in cells}
+    archs = sorted({c["arch"] for c in cells})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+    print("### Single-pod (16x16 = 256 chips) baseline roofline, per cell\n")
+    print("| arch | shape | status | compute_s | memory_s | collective_s | dominant"
+          " | peak GB/chip | MODEL/HLO flops | roofline frac | top collective |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            c = by.get((a, s, "pod16x16"))
+            if c is None:
+                continue
+            if c["status"] == "skipped":
+                print(f"| {a} | {s} | SKIP (full-attn @500k) | | | | | | | | |")
+                continue
+            if c["status"] != "ok":
+                print(f"| {a} | {s} | ERROR | | | | | | | | |")
+                continue
+            r = c["roofline"]
+            hc = c["hlo_cost"]
+            top = max(hc["collectives_by_type"], key=hc["collectives_by_type"].get) \
+                if hc["collectives_by_type"] else "-"
+            topgb = hc["collectives_by_type"].get(top, 0) / 1e9
+            print(f"| {a} | {s} | ok | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} |"
+                  f" {fmt_s(r['collective_s'])} | {r['dominant'][:-2]} |"
+                  f" {c['memory']['peak_gb']:.1f} | {r['useful_flops_ratio']:.2f} |"
+                  f" {r['roofline_fraction']:.4f} | {top} {topgb:.0f}GB |")
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) pass — shardability proof\n")
+    print("| arch | shape | status | peak GB/chip | compile_s | collective_s |")
+    print("|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            c = by.get((a, s, "pod2x16x16"))
+            if c is None:
+                continue
+            if c["status"] != "ok":
+                print(f"| {a} | {s} | {c['status'].upper()} | | | |")
+                continue
+            print(f"| {a} | {s} | ok | {c['memory']['peak_gb']:.1f} |"
+                  f" {c['compile_s']} | {fmt_s(c['roofline']['collective_s'])} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
