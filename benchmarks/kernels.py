@@ -9,6 +9,8 @@ reports the analytic HBM-traffic ratio the fusion buys on TPU:
   pairwise_lp:    naive = 3 matmuls + 2 adds + clip (5 HBM round-trips of the
                   (n, m) block); fused = 1."""
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -16,9 +18,12 @@ from repro.core import SketchConfig, pack_sketch, sketch
 
 from .common import emit, time_us
 
+# REPRO_BENCH_TINY=1: CI smoke mode — same code paths, toy shapes
+_TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+
 
 def run():
-    n, D, k = 512, 4096, 128
+    n, D, k = (64, 512, 32) if _TINY else (512, 4096, 128)
     X = jax.random.uniform(jax.random.key(20), (n, D))
     R = jax.random.normal(jax.random.key(21), (D, k))
     powers = (1, 2, 3)
@@ -49,4 +54,25 @@ def run():
                              bm=16, bn=16, bk=128, interpret=True)
     rows.append(("kernel_pairwise_lp_interpret_smoke", 0.0,
                  f"finite={bool(jnp.all(jnp.isfinite(small)))}"))
+
+    # the streaming engine over the same packed factors: fused top-k strips
+    from repro import engine
+    from repro.engine import EngineConfig
+    rb = cb = max(n // 4, 16)
+    eng = EngineConfig(backend="xla", row_block=rb, col_block=cb)
+    us_topk = time_us(
+        lambda: engine.pairwise(sk, None, cfg, reduce="topk", top_k=8, engine=eng),
+        reps=3,
+    )
+    dense = jax.numpy.asarray(
+        norms[:, None] + norms[None, :] + A @ B.T
+    )
+    dvals, didx = jax.lax.top_k(-jnp.maximum(dense, 0.0), 8)
+    evals, eidx = engine.pairwise(sk, None, cfg, reduce="topk", top_k=8, engine=eng)
+    rows.append((
+        "engine_streaming_topk", us_topk,
+        f"n={n};row_block={rb};col_block={cb};"
+        f"strips={-(-n // rb) * -(-n // cb)};"
+        f"matches_dense={bool(jnp.all(eidx == didx) and jnp.all(evals == -dvals))}",
+    ))
     return emit(rows)

@@ -3,6 +3,8 @@
 Derived: measured wall-clock speedup of the sketch path at D >> k, plus the
 median relative estimation error it pays for it."""
 
+import os
+
 import jax
 import numpy as np
 
@@ -15,9 +17,12 @@ from repro.core import (
 
 from .common import emit, time_us
 
+# REPRO_BENCH_TINY=1: CI smoke mode — same code paths, toy shapes
+_TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+
 
 def run():
-    n, D, k = 256, 8192, 64
+    n, D, k = (64, 512, 16) if _TINY else (256, 8192, 64)
     X = jax.random.uniform(jax.random.key(11), (n, D))
     cfg = SketchConfig(p=4, k=k, strategy="basic", block_d=1024)
     key = jax.random.key(0)
@@ -36,8 +41,23 @@ def run():
     off = ~np.eye(n, dtype=bool)
     rel = np.abs(D_est[off] - D_true[off]) / np.maximum(D_true[off], 1e-9)
     total_sketch = us_sketch + us_pair
+
+    # the streaming engine: fused top-k without the (n, n) intermediate —
+    # derived column reports the peak strip footprint vs the dense matrix
+    from repro import engine
+    from repro.engine import EngineConfig
+    rb = cb = max(n // 4, 16)
+    eng = EngineConfig(backend="xla", row_block=rb, col_block=cb)
+    us_stream = time_us(
+        lambda: engine.pairwise(sk, None, cfg, reduce="topk", top_k=10, engine=eng),
+        reps=3,
+    )
+    strip_mb = rb * cb * 4 / 1e6
+    dense_mb = n * n * 4 / 1e6
     return emit([
         ("scaling_exact_n2D", us_exact, f"n={n};D={D}"),
         ("scaling_sketch_total", total_sketch,
          f"sketch_us={us_sketch:.0f};pair_us={us_pair:.0f};speedup={us_exact/total_sketch:.1f}x;median_rel_err={np.median(rel):.3f}"),
+        ("scaling_engine_stream_topk", us_stream,
+         f"row_block={rb};col_block={cb};strip_mb={strip_mb:.2f};dense_mb={dense_mb:.2f};mem_ratio={dense_mb/strip_mb:.0f}x"),
     ])

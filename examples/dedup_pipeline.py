@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.data.dedup import SketchDedup
 from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.engine import default_backend
 
 data = SyntheticLM(DataConfig(vocab_size=5000, seq_len=128, global_batch=16, seed=7))
 dedup = SketchDedup(feature_dims=512, k=256, threshold=0.2)
@@ -26,4 +27,6 @@ for step in range(8):
 print(f"\ntotal: kept {total_kept}, dropped {total_dropped} "
       f"(reservoir holds {dedup._res.n} sketches, "
       f"{dedup._res.U.nbytes/1e6:.2f} MB)")
+print(f"batch-vs-reservoir distances streamed via repro.engine "
+      f"threshold reduce ({default_backend()} backend) — no (B, R) matrix")
 assert total_dropped >= 8  # the re-emitted documents were caught

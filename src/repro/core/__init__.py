@@ -10,6 +10,9 @@ Public API:
   variance:       variance_plain, variance_margin_mle, delta_basic_vs_alternative
   pairwise:       pairwise_distances, pairwise_margin_mle, knn, pack_sketch
   distributed:    sketch_sharded, pairwise_sharded, knn_sharded
+
+All O(n·m) pairwise work (knn, the sharded strips, data/dedup) streams
+through ``repro.engine`` — see that package for the strip/reduction engine.
 """
 
 from .decomposition import (

@@ -110,8 +110,11 @@ def pairwise_sharded(
     Output (n, n) sharded rows over ``data_axes``: each shard computes its
     (n_loc, n) strip against the all-gathered packed right factor.
     """
+    from repro.engine import default_backend, strip_distances  # lazy: avoids cycle
+
     data_axes = _tuple(data_axes)
     A, B, norms = pack_sketch(sk, cfg)
+    backend = default_backend()
 
     def strip(a_loc, b_loc, n_loc, n_all_in):
         b_all = b_loc
@@ -119,8 +122,7 @@ def pairwise_sharded(
         for ax in data_axes:
             b_all = jax.lax.all_gather(b_all, ax, tiled=True)
             n_all = jax.lax.all_gather(n_all, ax, tiled=True)
-        D = n_loc[:, None] + n_all[None, :] + a_loc @ b_all.T
-        return jnp.maximum(D, 0.0) if clip else D
+        return strip_distances(a_loc, b_all, n_loc, n_all, backend=backend, clip=clip)
 
     spec_rows = P(data_axes, None)
     spec_vec = P(data_axes)
@@ -140,22 +142,32 @@ def knn_sharded(
     top_k: int = 10,
     *,
     data_axes: Sequence[str] | str = "data",
+    engine_cfg=None,
 ):
     """Distributed KNN: corpus rows sharded; queries replicated.
 
-    Each shard top-k's its local strip; the (small) candidate lists are
-    all-gathered and re-ranked — a standard two-stage distributed ANN reduce.
+    Each shard streams its local strip through the engine's fused top-k
+    (col_block columns at a time — the full (q, n_loc) block never
+    materializes); the (small) candidate lists are all-gathered and
+    re-ranked — a standard two-stage distributed ANN reduce.
     Returns (distances (q, top_k), global indices (q, top_k)).
     """
+    from repro.engine import EngineConfig, streaming_topk  # lazy: avoids cycle
+
     data_axes = _tuple(data_axes)
     Aq, _, nq = pack_sketch(queries, cfg)
     _, Bc, nc = pack_sketch(corpus, cfg)
+    backend, _, col_block = (engine_cfg or EngineConfig()).resolve()
 
     def local_topk(aq, nq_, bc, nc_):
         nloc = bc.shape[0]
-        D = nq_[:, None] + nc_[None, :] + aq @ bc.T
-        D = jnp.maximum(D, 0.0)
-        neg, idx = jax.lax.top_k(-D, min(top_k, nloc))
+        # stream the local strip through the engine: the (q, nloc) block is
+        # consumed col_block columns at a time with a fused candidate merge
+        vals, idx = streaming_topk(
+            aq, nq_, bc, nc_,
+            top_k=min(top_k, nloc), col_block=col_block, backend=backend,
+        )
+        neg = -vals
         # globalize indices
         shard = jax.lax.axis_index(data_axes[0])
         for ax in data_axes[1:]:

@@ -113,7 +113,6 @@ def pairwise_margin_mle(
     return jnp.maximum(D, 0.0) if clip else D
 
 
-@partial(jax.jit, static_argnames=("cfg", "top_k", "mle"))
 def knn(
     queries: LpSketch,
     corpus: LpSketch,
@@ -121,12 +120,24 @@ def knn(
     top_k: int = 10,
     *,
     mle: bool = False,
+    engine_cfg=None,
 ):
     """Top-k nearest corpus rows per query under estimated l_p^p distance.
 
-    Returns (distances (q, top_k), indices (q, top_k)), ascending.
+    Returns (distances (q, k), indices (q, k)), ascending, k = min(top_k, m).
+    Streams (row_block, col_block) strips through ``repro.engine`` with a
+    fused per-row candidate merge — the (q, m) matrix never materializes, so
+    the corpus can exceed device memory.  With ``mle=False`` results are
+    identical to the dense ``top_k(pairwise_distances(...))`` path on CPU
+    (same values, same tie-breaking); ``mle=True`` strips at non-default
+    block sizes can differ from the dense path by fp noise (different XLA
+    small-matmul lowerings).
     """
-    fn = pairwise_margin_mle if mle else pairwise_distances
-    D = fn(queries, corpus, cfg, clip=True)
-    neg, idx = jax.lax.top_k(-D, top_k)
-    return -neg, idx
+    from repro.engine import pairwise as engine_pairwise  # lazy: avoids cycle
+
+    return engine_pairwise(
+        queries, corpus, cfg,
+        reduce="topk", top_k=top_k,
+        estimator="mle" if mle else "plain",
+        engine=engine_cfg,
+    )

@@ -5,7 +5,10 @@ Each example is featurized as a hashed token-count histogram (D bins); the
 l4 distance between histograms is tiny for near-duplicate sequences.  We keep
 a reservoir of sketches of recently admitted examples and drop an incoming
 example when its estimated l4 distance to any reservoir entry falls below a
-threshold.  All O(n^2 D) pairwise work happens in the O(n^2 k) sketch domain."""
+threshold.  All O(n^2 D) pairwise work happens in the O(n^2 k) sketch domain,
+streamed through ``repro.engine``'s fused threshold reduction — only the
+(batch, reservoir) index pairs under the radius ever leave the strip loop,
+so the reservoir can grow far past what a dense (B, R) matrix would allow."""
 
 from __future__ import annotations
 
@@ -15,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LpSketch, SketchConfig, pairwise_margin_mle, sketch
+from repro import engine
+from repro.core import LpSketch, SketchConfig, sketch
 
 __all__ = ["SketchDedup", "featurize_tokens"]
 
@@ -59,20 +63,23 @@ class SketchDedup:
         feats = featurize_tokens(tokens, self.feature_dims)
         sk = self._sketch(feats)
         B = tokens.shape[0]
-        norms = sk.norm_pp(self.cfg.p)
-        D_self = pairwise_margin_mle(sk, None, self.cfg, clip=True)
-        scale_self = norms[:, None] + norms[None, :]
-        earlier = jnp.tril(jnp.ones((B, B), bool), k=-1)
-        dup_in_batch = jnp.any((D_self < self.threshold * scale_self) & earlier,
-                               axis=1)
+        # engine threshold reduce: strips of margin-MLE estimates, only the
+        # pairs under the relative radius survive — never a (B, B) matrix
+        r, c = engine.pairwise(
+            sk, None, self.cfg, reduce="threshold",
+            radius=self.threshold, relative=True, estimator="mle",
+        )
+        dup_in_batch = np.zeros(B, bool)
+        dup_in_batch[r[c < r]] = True  # only earlier-in-batch neighbors count
+        dup_vs_res = np.zeros(B, bool)
         if self._res is not None:
-            D_res = pairwise_margin_mle(sk, self._res, self.cfg, clip=True)
-            scale_res = norms[:, None] + self._res.norm_pp(self.cfg.p)[None, :]
-            dup_vs_res = jnp.any(D_res < self.threshold * scale_res, axis=1)
-        else:
-            dup_vs_res = jnp.zeros(B, bool)
+            rr, _ = engine.pairwise(
+                sk, self._res, self.cfg, reduce="threshold",
+                radius=self.threshold, relative=True, estimator="mle",
+            )
+            dup_vs_res[rr] = True
         keep = ~(dup_in_batch | dup_vs_res)
-        kept_idx = np.flatnonzero(np.asarray(keep))
+        kept_idx = np.flatnonzero(keep)
         kept = LpSketch(U=sk.U[kept_idx], moments=sk.moments[kept_idx])
         if self._res is None:
             self._res = kept
@@ -82,4 +89,4 @@ class SketchDedup:
                 moments=jnp.concatenate([self._res.moments, kept.moments])[-self.reservoir:],
             )
         stats = {"kept": int(keep.sum()), "dropped": int(B - keep.sum())}
-        return keep, stats
+        return jnp.asarray(keep), stats

@@ -1,0 +1,154 @@
+"""The streaming pairwise engine — single entry point for all O(n·m) work.
+
+``pairwise(sa, sb, cfg, reduce=...)`` tiles the packed sketch factors into
+(row_block, col_block) strips, runs each strip through a platform-dispatched
+backend (Pallas kernel on TPU, interpreter or pure XLA on CPU), and fuses the
+requested reduction into the strip loop so the (n, m) estimate never
+materializes on device:
+
+  reduce="topk"       streaming per-row candidate merge -> (dists, indices)
+  reduce="threshold"  (rows, cols) index pairs with D < radius (optionally
+                      relative to the marginal-norm scale, the dedup regime)
+  reduce="full"       legacy dense output, assembled strip-by-strip in host
+                      memory (returned as a NumPy array)
+
+``estimator="mle"`` swaps the plain packed-matmul strip for the margin-MLE
+strip (Lemma 4 per-term Newton refinement via ``pairwise_margin_mle`` on the
+row-sliced sketches) — same streaming reductions apply.
+
+On CPU with the default ``xla`` backend every reduction is bit-identical to
+the dense ``pairwise_distances``/``knn`` path: strip blocking never splits
+the K reduction, and the top-k merge preserves dense tie-breaking.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pairwise import pack_sketch, pairwise_margin_mle
+from repro.core.sketch import LpSketch, SketchConfig
+
+from .backends import strip_distances
+from .config import EngineConfig
+from .reduce import streaming_topk_strips, strip_bounds
+
+__all__ = ["pairwise"]
+
+_REDUCES = ("full", "topk", "threshold")
+_ESTIMATORS = ("plain", "mle")
+
+
+def _rows(sk: LpSketch, r0: int, r1: int) -> LpSketch:
+    return LpSketch(U=sk.U[r0:r1], moments=sk.moments[r0:r1])
+
+
+def pairwise(
+    sa: LpSketch,
+    sb: Optional[LpSketch],
+    cfg: SketchConfig,
+    *,
+    reduce: str = "full",
+    top_k: int = 10,
+    radius: Optional[float] = None,
+    relative: bool = False,
+    estimator: str = "plain",
+    clip: bool = True,
+    zero_diag: bool = False,
+    engine: Optional[EngineConfig] = None,
+) -> Union[np.ndarray, Tuple[jax.Array, jax.Array], Tuple[np.ndarray, np.ndarray]]:
+    """Streaming pairwise l_p^p distance estimates with a fused reduction.
+
+    Args:
+      sa: left/query sketch (n rows).
+      sb: right/corpus sketch (m rows); ``None`` means self-pairs against sa.
+      cfg: the sketch configuration both sketches were built with.
+      reduce: "full" | "topk" | "threshold" (see module docstring).
+      top_k: neighbors per row for reduce="topk" (capped at m).
+      radius: threshold for reduce="threshold"; pairs with D < radius are
+        returned.  With ``relative=True`` the test is
+        D < radius * (||x_i||_p^p + ||y_j||_p^p) — the dedup criterion.
+      estimator: "plain" (packed single-matmul strips) or "mle"
+        (margin-MLE strips, Lemma 4).
+      clip: clamp estimates at 0 (both dense paths default to this).
+      zero_diag: reduce="full" + self-pairs only — zero the diagonal.
+      engine: block sizes / backend override (platform defaults otherwise).
+
+    Returns:
+      reduce="full":      np.ndarray (n, m), assembled in host memory.
+      reduce="topk":      (distances (n, k), indices (n, k)) jax arrays,
+                          ascending, k = min(top_k, m).
+      reduce="threshold": (rows, cols) int np.ndarrays in row-major order.
+    """
+    if reduce not in _REDUCES:
+        raise ValueError(f"reduce must be one of {_REDUCES}, got {reduce!r}")
+    if estimator not in _ESTIMATORS:
+        raise ValueError(f"estimator must be one of {_ESTIMATORS}, got {estimator!r}")
+    if reduce == "threshold" and radius is None:
+        raise ValueError("reduce='threshold' requires a radius")
+
+    engine = engine or EngineConfig()
+    backend, row_block, col_block = engine.resolve()
+
+    self_pairs = sb is None
+    sb_ = sa if self_pairs else sb
+    n, m = sa.n, sb_.n
+
+    if estimator == "plain":
+        A, _, na = pack_sketch(sa, cfg)
+        _, B, nb = pack_sketch(sb_, cfg)
+
+        def strip(r0, r1, c0, c1):
+            return strip_distances(
+                A[r0:r1], B[c0:c1], na[r0:r1], nb[c0:c1],
+                backend=backend, clip=clip,
+            )
+    else:
+        na, nb = sa.norm_pp(cfg.p), sb_.norm_pp(cfg.p)
+
+        def strip(r0, r1, c0, c1):
+            return pairwise_margin_mle(
+                _rows(sa, r0, r1), _rows(sb_, c0, c1), cfg, clip=clip
+            )
+
+    if reduce == "topk":
+        vals, idx = [], []
+        for r0, r1 in strip_bounds(n, row_block):
+            v, i = streaming_topk_strips(
+                lambda c0, c1, r0=r0, r1=r1: strip(r0, r1, c0, c1),
+                r1 - r0, m, top_k=top_k, col_block=col_block,
+            )
+            vals.append(v)
+            idx.append(i)
+        return jnp.concatenate(vals, axis=0), jnp.concatenate(idx, axis=0)
+
+    if reduce == "threshold":
+        na_h, nb_h = np.asarray(na), np.asarray(nb)
+        rows_out, cols_out = [], []
+        for r0, r1 in strip_bounds(n, row_block):
+            for c0, c1 in strip_bounds(m, col_block):
+                D = np.asarray(strip(r0, r1, c0, c1))
+                if relative:
+                    scale = na_h[r0:r1, None] + nb_h[None, c0:c1]
+                    mask = D < radius * scale
+                else:
+                    mask = D < radius
+                rr, cc = np.nonzero(mask)
+                rows_out.append(rr + r0)
+                cols_out.append(cc + c0)
+        rows = np.concatenate(rows_out) if rows_out else np.zeros(0, np.intp)
+        cols = np.concatenate(cols_out) if cols_out else np.zeros(0, np.intp)
+        order = np.lexsort((cols, rows))  # row-major, == np.nonzero on dense
+        return rows[order], cols[order]
+
+    # reduce == "full": legacy dense output, assembled strip-by-strip on host
+    out = np.empty((n, m), np.float32)
+    for r0, r1 in strip_bounds(n, row_block):
+        for c0, c1 in strip_bounds(m, col_block):
+            out[r0:r1, c0:c1] = np.asarray(strip(r0, r1, c0, c1))
+    if zero_diag and self_pairs:
+        np.fill_diagonal(out, 0.0)
+    return out

@@ -1,0 +1,42 @@
+"""Strip backends: one (row_block, col_block) distance strip, three routes.
+
+Every backend computes the identical estimate
+
+    D[i, j] = na[i] + nb[j] + sum_K A[i, :] B[j, :]        (clipped at 0)
+
+on a strip of the packed factors from ``repro.core.pairwise.pack_sketch``:
+
+  * ``xla``:       pure-jnp (the kernel's reference semantics).  On CPU this
+                   is bit-identical to the dense ``pairwise_distances`` path —
+                   row/col blocking never splits the K reduction.
+  * ``pallas``:    the fused Pallas TPU kernel (``pairwise_lp_call``).
+  * ``interpret``: the same kernel program through the Pallas interpreter.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pairwise_lp.kernel import pairwise_lp_call
+from repro.kernels.pairwise_lp.ref import pairwise_lp_ref
+
+__all__ = ["strip_distances"]
+
+
+def strip_distances(
+    A: jax.Array,
+    B: jax.Array,
+    na: jax.Array,
+    nb: jax.Array,
+    *,
+    backend: str = "xla",
+    clip: bool = True,
+) -> jax.Array:
+    """(rows(A), rows(B)) distance-estimate strip via the chosen backend."""
+    if backend == "xla":
+        return pairwise_lp_ref(A, B, na, nb, clip=clip)
+    if backend == "pallas":
+        return pairwise_lp_call(A, B, na, nb, clip=clip, interpret=False)
+    if backend == "interpret":
+        return pairwise_lp_call(A, B, na, nb, clip=clip, interpret=True)
+    raise ValueError(f"unknown engine backend {backend!r}")

@@ -1,0 +1,106 @@
+"""Streaming reductions fused into the strip loop.
+
+The top-k merge keeps a per-row running candidate list of size k and folds
+each new strip's local top-k into it, so only (rows, k) state survives a
+strip — never the (n, m) matrix.  Tie-breaking matches a dense
+``jax.lax.top_k`` over the full row exactly: ``lax.top_k`` resolves equal
+values by position, the running list always precedes the new strip in the
+concatenation, and running candidates always carry smaller global column
+indices than strip candidates (strips are consumed left to right), so equal
+distances resolve to the lowest index — same as dense.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .backends import strip_distances
+
+__all__ = ["streaming_topk", "streaming_topk_strips", "merge_topk", "strip_bounds"]
+
+_IDX_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def strip_bounds(total: int, block: int):
+    """(start, stop) strip bounds covering [0, total), never leaving a
+    width-1 tail: XLA lowers an (n, K) x (K, 1) strip as a GEMV whose
+    K-accumulation order differs from GEMM columns, which would break the
+    engine's bit-for-bit match with the dense path.  A single-element
+    remainder is absorbed into the preceding strip instead."""
+    bounds = []
+    c0 = 0
+    while c0 < total:
+        c1 = min(c0 + block, total)
+        if total - c1 == 1:
+            c1 = total
+        bounds.append((c0, c1))
+        c0 = c1
+    return bounds
+
+
+@partial(jax.jit, static_argnames=("c",))
+def _strip_topk(D: jax.Array, c: int, col_offset: jax.Array):
+    """Per-row best c candidates of one strip, columns globalized."""
+    neg, j = jax.lax.top_k(-D, c)
+    return -neg, (j + col_offset).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def merge_topk(vals, idx, cand_vals, cand_idx, k: int):
+    """Fold strip candidates into the running (rows, k) lists (ascending)."""
+    v = jnp.concatenate([vals, cand_vals], axis=1)
+    i = jnp.concatenate([idx, cand_idx], axis=1)
+    neg, pos = jax.lax.top_k(-v, k)
+    return -neg, jnp.take_along_axis(i, pos, axis=1)
+
+
+def streaming_topk_strips(
+    strip_fn: Callable[[int, int], jax.Array],
+    rows: int,
+    cols: int,
+    *,
+    top_k: int,
+    col_block: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Generic streaming top-k: ``strip_fn(c0, c1)`` -> (rows, c1-c0) strip.
+
+    Returns (distances (rows, k), column indices (rows, k)), ascending, with
+    k = min(top_k, cols).  Works eagerly (strips dispatched one at a time)
+    and under tracing (the strip loop unrolls — strip count is static).
+    """
+    k = min(top_k, cols)
+    vals = jnp.full((rows, k), jnp.inf, jnp.float32)
+    idx = jnp.full((rows, k), _IDX_SENTINEL, jnp.int32)
+    for c0, c1 in strip_bounds(cols, col_block):
+        D = strip_fn(c0, c1)
+        cand_vals, cand_idx = _strip_topk(D, min(k, c1 - c0), jnp.int32(c0))
+        vals, idx = merge_topk(vals, idx, cand_vals, cand_idx, k)
+    return vals, idx
+
+
+def streaming_topk(
+    A: jax.Array,
+    na: jax.Array,
+    B: jax.Array,
+    nb: jax.Array,
+    *,
+    top_k: int,
+    col_block: int,
+    backend: str = "xla",
+    clip: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Streaming top-k over packed factors: smallest estimated distances of
+    each row of A against all rows of B, without materializing (n, m)."""
+
+    def strip(c0, c1):
+        return strip_distances(
+            A, B[c0:c1], na, nb[c0:c1], backend=backend, clip=clip
+        )
+
+    return streaming_topk_strips(
+        strip, A.shape[0], B.shape[0], top_k=top_k, col_block=col_block
+    )

@@ -1,0 +1,72 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The CI environment installs the real library (see pyproject's ``test``
+extra); this shim only exists so the property-test modules still collect and
+run in bare environments.  It implements the tiny subset the tests use —
+``given``/``settings`` and the ``integers``/``lists``/``sampled_from``
+strategies — driving each property with a fixed-seed pseudo-random sweep
+instead of hypothesis's adaptive search + shrinking.
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def _lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda rng: [
+            elements.example(rng) for _ in range(rng.randint(min_size, max_size))
+        ]
+    )
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, sampled_from=_sampled_from, lists=_lists
+)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def apply(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return apply
+
+
+def given(*strats):
+    def decorate(fn):
+        # deliberately NOT functools.wraps: the runner must expose a zero-arg
+        # signature or pytest mistakes the generated params for fixtures
+        def runner():
+            rng = random.Random(0xC0FFEE)
+            for _ in range(getattr(runner, "_max_examples", _DEFAULT_MAX_EXAMPLES)):
+                args = [s.example(rng) for s in strats]
+                fn(*args)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return runner
+
+    return decorate

@@ -6,8 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # bare env: deterministic fallback (CI has the real one)
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
 
 from repro.core import (
     exact_lp_distance,

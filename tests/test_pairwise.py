@@ -14,6 +14,7 @@ from repro.core import (
     pairwise_distances,
     pairwise_margin_mle,
     sketch,
+    variance_plain,
 )
 
 KEY = jax.random.key(3)
@@ -64,8 +65,19 @@ def test_cross_set_pairwise():
     D = np.asarray(pairwise_distances(_sk(A, cfg), _sk(B, cfg), cfg))
     exact = np.asarray(exact_pairwise_lp(A, B, 4))
     assert D.shape == (4, 7)
-    rel = np.abs(D - exact) / np.maximum(exact, 1e-9)
-    assert np.median(rel) < 0.5  # k=256 on D=128: coarse but unbiased
+    # The right tolerance is not a constant: Lemma 1 gives Var(d_hat) per
+    # pair, and on this data sigma is comparable to the distances themselves
+    # (relative error O(1) at k=256 is expected, not a bug).  Bound the
+    # z-scores instead: every pair within a few sigma, bulk well inside.
+    An, Bn = np.asarray(A), np.asarray(B)
+    sigma = np.sqrt([
+        [float(variance_plain(An[i], Bn[j], cfg.p, cfg.k, cfg.strategy))
+         for j in range(B.shape[0])]
+        for i in range(A.shape[0])
+    ])
+    z = np.abs(D - exact) / sigma
+    assert np.all(z < 4.0), z
+    assert np.median(z) < 2.0, z
 
 
 def test_knn_recovers_clusters():
