@@ -1,0 +1,75 @@
+"""Index serving benchmark: ingest throughput + query latency percentiles.
+
+Emits the harness CSV rows (name,us_per_call,derived):
+
+  index_ingest   us per ingest(batch) call    derived = rows_per_s
+  index_query    us per query(top_k) call     derived = p50_ms|p95_ms
+  index_query_mb us per micro-batched row     derived = rows_per_s (batched)
+
+REPRO_BENCH_TINY=1 shrinks shapes for the CI smoke job.
+"""
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import SketchConfig
+from repro.index import IndexConfig, SketchIndex
+
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+
+
+def run():
+    n, d, k, cap = ((2048, 1024, 64, 512) if TINY else
+                    (16384, 8192, 256, 4096))
+    batch, q, top_k = (128 if TINY else 512), 16, 10
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (n, d)).astype(np.float32)
+    index = SketchIndex(
+        SketchConfig(p=4, k=k, block_d=min(1024, d)),
+        index_cfg=IndexConfig(segment_capacity=cap),
+    )
+
+    # warmup: compile sketch + writer for the batch shape
+    index.ingest(jnp.asarray(X[:batch]))
+    t0 = time.perf_counter()
+    for lo in range(batch, n, batch):
+        index.ingest(jnp.asarray(X[lo:lo + batch]))
+    dt = time.perf_counter() - t0
+    ingest_us = dt / max((n - batch) // batch, 1) * 1e6
+    rows_per_s = (n - batch) / dt
+
+    Q = jnp.asarray(X[:q] + 0.01 * rng.standard_normal((q, d)).astype(np.float32))
+    index.query(Q, top_k=top_k)  # warmup
+    lat = []
+    for _ in range(3 if TINY else 10):
+        t0 = time.perf_counter()
+        index.query(Q, top_k=top_k)
+        lat.append((time.perf_counter() - t0) * 1e3)
+    lat = np.sort(np.asarray(lat))
+    p50 = float(np.percentile(lat, 50))
+    p95 = float(np.percentile(lat, 95))
+
+    # one fused pass over 4x the rows ~= the micro-batcher's coalesced shape
+    Qb = jnp.concatenate([Q] * 4, axis=0)
+    index.query(Qb, top_k=top_k)
+    t0 = time.perf_counter()
+    reps = 3 if TINY else 10
+    for _ in range(reps):
+        index.query(Qb, top_k=top_k)
+    per_row_us = (time.perf_counter() - t0) / (reps * Qb.shape[0]) * 1e6
+
+    emit([
+        ("index_ingest", ingest_us, f"rows_per_s={rows_per_s:.0f}"),
+        ("index_query", p50 * 1e3, f"p50_ms={p50:.2f}|p95_ms={p95:.2f}"),
+        ("index_query_mb", per_row_us,
+         f"rows_per_s={1e6 / max(per_row_us, 1e-9):.0f}"),
+    ])
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

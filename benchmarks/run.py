@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.scaling",
     "benchmarks.kernels",
     "benchmarks.dedup",
+    "benchmarks.index_serving",
     "benchmarks.train_throughput",
     "benchmarks.roofline_report",
 ]

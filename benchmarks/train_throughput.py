@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ShapeConfig, TrainKnobs, reduced
+from repro.compat import make_mesh
 from repro.configs.registry import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_parallel
@@ -22,8 +23,7 @@ def run():
         knobs = TrainKnobs(microbatches=1, remat="none",
                            sequence_parallel=False, attn_q_chunk=64,
                            vocab_chunk=64, ssd_chunk=32)
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         par = make_parallel(mesh, knobs=knobs, constrain=False)
         model = build_model(cfg, par, knobs)
         B, S = 4, 64

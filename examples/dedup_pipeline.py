@@ -25,8 +25,8 @@ for step in range(8):
     print(f"step {step}: kept {stats['kept']:2d} dropped {stats['dropped']:2d}")
 
 print(f"\ntotal: kept {total_kept}, dropped {total_dropped} "
-      f"(reservoir holds {dedup._res.n} sketches, "
-      f"{dedup._res.U.nbytes/1e6:.2f} MB)")
+      f"(reservoir ring holds {dedup._res.size} sketches, "
+      f"{dedup._res.U.nbytes/1e6:.2f} MB fixed)")
 print(f"batch-vs-reservoir distances streamed via repro.engine "
       f"threshold reduce ({default_backend()} backend) — no (B, R) matrix")
 assert total_dropped >= 8  # the re-emitted documents were caught

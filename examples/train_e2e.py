@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import CheckpointManager
+from repro.compat import make_mesh
 from repro.configs.base import ModelConfig, ShapeConfig, TrainKnobs
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_parallel
@@ -45,8 +46,7 @@ print(f"model {cfg.name}: {n/1e6:.1f}M params, {steps} steps")
 knobs = TrainKnobs(microbatches=2, remat="layer", sequence_parallel=False,
                    learning_rate=3e-3, attn_q_chunk=128, vocab_chunk=128,
                    grad_clip=1.0, weight_decay=0.0)
-mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
 par = make_parallel(mesh, knobs=knobs, constrain=False)
 model = build_model(cfg, par, knobs)
 shape = ShapeConfig("e2e", sl, gb, "train")

@@ -8,6 +8,7 @@ targets any device layout by passing shardings (elastic scaling)."""
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
@@ -18,7 +19,47 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointManager"]
+__all__ = [
+    "atomic_replace_dir",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "CheckpointManager",
+]
+
+
+@contextlib.contextmanager
+def atomic_replace_dir(final: str):
+    """Yield a temp dir that atomically replaces ``final`` when the block
+    exits cleanly — a crash never loses the previous ``final``.  The commit
+    is rename-only: the old dir is renamed aside (never rmtree'd before the
+    new one is in place), the temp dir renamed in, then the backup removed.
+    A crash between the two renames is healed on the next call (the backup
+    is restored when ``final`` is missing).  The temp dir lives next to
+    ``final`` so renames stay on one filesystem; it is removed on failure.
+    This is the commit primitive under both training checkpoints and
+    ``repro.index`` persistence."""
+    final = os.path.abspath(final)
+    parent = os.path.dirname(final)
+    backup = final + ".replaced"
+    os.makedirs(parent, exist_ok=True)
+    if os.path.exists(backup):
+        if os.path.exists(final):  # prior crash after commit: stale backup
+            shutil.rmtree(backup)
+        else:                      # prior crash mid-commit: restore
+            os.rename(backup, final)
+    tmp = os.path.join(
+        parent, f".tmp.{os.path.basename(final)}.{os.getpid()}.{time.time_ns()}"
+    )
+    os.makedirs(tmp)
+    try:
+        yield tmp
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if os.path.exists(final):
+        os.rename(final, backup)
+    os.rename(tmp, final)
+    shutil.rmtree(backup, ignore_errors=True)
 
 _SEP = "___"
 
@@ -34,28 +75,24 @@ def _flatten(tree) -> dict[str, Any]:
 
 
 def save_checkpoint(directory: str, step: int, state) -> str:
-    """Atomic: write to <dir>/tmp.<step>.<pid>, fsync, rename to step_<step>."""
+    """Atomic: write to a temp dir, fsync, rename to step_<step>."""
     final = os.path.join(directory, f"step_{step:08d}")
-    tmp = os.path.join(directory, f".tmp.{step}.{os.getpid()}.{time.time_ns()}")
-    os.makedirs(tmp, exist_ok=True)
-    flat = _flatten(state)
-    dtypes = {}
-    for key, leaf in flat.items():
-        arr = np.asarray(jax.device_get(leaf))
-        dtypes[key] = str(arr.dtype)
-        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
-            # non-native dtypes (bfloat16, fp8) round-trip via float32 —
-            # lossless (fp32 is a superset), keeps .npy plain
-            arr = arr.astype(np.float32)
-        np.save(os.path.join(tmp, f"{key}.npy"), arr)
-    manifest = {"step": step, "keys": sorted(flat), "dtypes": dtypes}
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    with atomic_replace_dir(final) as tmp:
+        flat = _flatten(state)
+        dtypes = {}
+        for key, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            dtypes[key] = str(arr.dtype)
+            if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+                # non-native dtypes (bfloat16, fp8) round-trip via float32 —
+                # lossless (fp32 is a superset), keeps .npy plain
+                arr = arr.astype(np.float32)
+            np.save(os.path.join(tmp, f"{key}.npy"), arr)
+        manifest = {"step": step, "keys": sorted(flat), "dtypes": dtypes}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
     return final
 
 

@@ -22,8 +22,11 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import pcast, shard_map
 
 from .decomposition import power_moments
 from .pairwise import pack_sketch
@@ -83,8 +86,8 @@ def sketch_sharded(
 
         U0 = jnp.zeros((nloc, cfg.vectors_per_row, cfg.k), cfg.projection.dtype)
         M0 = jnp.zeros((nloc, cfg.p - 1), jnp.float32)
-        U0 = jax.lax.pcast(U0, (*data_axes, model_axis), to="varying")
-        M0 = jax.lax.pcast(M0, (*data_axes, model_axis), to="varying")
+        U0 = pcast(U0, (*data_axes, model_axis), to="varying")
+        M0 = pcast(M0, (*data_axes, model_axis), to="varying")
         (U, M), _ = jax.lax.scan(body, (U0, M0), jnp.arange(blocks_per_shard))
         U = jax.lax.psum(U, model_axis)
         moments = jax.lax.psum(M, model_axis)
@@ -92,7 +95,7 @@ def sketch_sharded(
 
     in_spec = P(data_axes, model_axis)
     out_spec = LpSketch(U=P(data_axes, None, None), moments=P(data_axes, None))
-    return jax.shard_map(
+    return shard_map(
         local_sketch, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec
     )(X)
 
@@ -104,34 +107,87 @@ def pairwise_sharded(
     *,
     data_axes: Sequence[str] | str = "data",
     clip: bool = True,
-) -> jax.Array:
+    reduce: str = "full",
+    radius: Optional[float] = None,
+    relative: bool = False,
+    engine_cfg=None,
+):
     """Self all-pairs distances for a row-sharded sketch.
 
-    Output (n, n) sharded rows over ``data_axes``: each shard computes its
-    (n_loc, n) strip against the all-gathered packed right factor.
+    ``reduce="full"`` (default): (n, n) distances sharded rows over
+    ``data_axes`` — each shard computes its (n_loc, n) strip against the
+    all-gathered packed right factor.
+
+    ``reduce="threshold"``: the engine's threshold reduction routed through
+    the per-shard strips — each shard streams its (n_loc, n) block
+    ``col_block`` columns at a time and only a *bool* hit mask (4 bytes/pair
+    smaller than fp32 distances, and never the distances themselves) leaves
+    the shard; the host converts to (rows, cols) index pairs in row-major
+    order, the same contract (and bit-identical pairs on CPU) as
+    ``engine.pairwise(..., reduce="threshold")``.  ``relative=True`` tests
+    D < radius * (||x_i||_p^p + ||x_j||_p^p), the dedup criterion.
     """
-    from repro.engine import default_backend, strip_distances  # lazy: avoids cycle
+    from repro.engine import EngineConfig, default_backend, strip_distances
+    from repro.engine.reduce import strip_bounds
+
+    if reduce not in ("full", "threshold"):
+        raise ValueError(f"reduce must be 'full' or 'threshold', got {reduce!r}")
+    if reduce == "threshold" and radius is None:
+        raise ValueError("reduce='threshold' requires a radius")
 
     data_axes = _tuple(data_axes)
     A, B, norms = pack_sketch(sk, cfg)
     backend = default_backend()
+    spec_rows = P(data_axes, None)
+    spec_vec = P(data_axes)
 
-    def strip(a_loc, b_loc, n_loc, n_all_in):
-        b_all = b_loc
-        n_all = n_all_in
+    def _gather(b_loc, n_loc):
+        b_all, n_all = b_loc, n_loc
         for ax in data_axes:
             b_all = jax.lax.all_gather(b_all, ax, tiled=True)
             n_all = jax.lax.all_gather(n_all, ax, tiled=True)
-        return strip_distances(a_loc, b_all, n_loc, n_all, backend=backend, clip=clip)
+        return b_all, n_all
 
-    spec_rows = P(data_axes, None)
-    spec_vec = P(data_axes)
-    return jax.shard_map(
-        strip,
+    if reduce == "full":
+
+        def strip(a_loc, b_loc, n_loc, n_all_in):
+            b_all, n_all = _gather(b_loc, n_all_in)
+            return strip_distances(a_loc, b_all, n_loc, n_all,
+                                   backend=backend, clip=clip)
+
+        return shard_map(
+            strip,
+            mesh=mesh,
+            in_specs=(spec_rows, spec_rows, spec_vec, spec_vec),
+            out_specs=spec_rows,
+        )(A, B, norms, norms)
+
+    # reduce == "threshold"
+    n = sk.n
+    backend, _, col_block = (engine_cfg or EngineConfig()).resolve()
+    bounds = strip_bounds(n, col_block)
+
+    def local_mask(a_loc, b_loc, n_loc, n_all_in):
+        b_all, n_all = _gather(b_loc, n_all_in)
+        hits = []
+        for c0, c1 in bounds:  # static unroll: one col strip live at a time
+            D = strip_distances(a_loc, b_all[c0:c1], n_loc, n_all[c0:c1],
+                                backend=backend, clip=clip)
+            if relative:
+                scale = n_loc[:, None] + n_all[None, c0:c1]
+                hits.append(D < radius * scale)
+            else:
+                hits.append(D < radius)
+        return jnp.concatenate(hits, axis=1)
+
+    mask = shard_map(
+        local_mask,
         mesh=mesh,
         in_specs=(spec_rows, spec_rows, spec_vec, spec_vec),
         out_specs=spec_rows,
     )(A, B, norms, norms)
+    rows, cols = np.nonzero(np.asarray(mask))  # row-major, == engine order
+    return rows, cols
 
 
 def knn_sharded(
@@ -181,7 +237,7 @@ def knn_sharded(
         neg2, pos = jax.lax.top_k(negs, top_k)
         return -neg2, jnp.take_along_axis(gidxs, pos, axis=1)
 
-    return jax.shard_map(
+    return shard_map(
         local_topk,
         mesh=mesh,
         in_specs=(P(None, None), P(None), P(data_axes, None), P(data_axes)),

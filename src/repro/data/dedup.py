@@ -20,6 +20,7 @@ import numpy as np
 
 from repro import engine
 from repro.core import LpSketch, SketchConfig, sketch
+from repro.index import SketchReservoir
 
 __all__ = ["SketchDedup", "featurize_tokens"]
 
@@ -48,7 +49,10 @@ class SketchDedup:
         self.cfg = SketchConfig(p=4, k=self.k, strategy="basic",
                                 block_d=min(512, self.feature_dims))
         self.key = jax.random.key(self.seed)
-        self._res: LpSketch | None = None
+        # index-backed FIFO ring with eviction: admits write oldest slots in
+        # place (O(batch) per admit) instead of re-concatenating the whole
+        # reservoir every batch
+        self._res = SketchReservoir(self.cfg, self.reservoir)
 
     def _sketch(self, feats: jax.Array) -> LpSketch:
         return sketch(feats, self.key, self.cfg)
@@ -72,21 +76,19 @@ class SketchDedup:
         dup_in_batch = np.zeros(B, bool)
         dup_in_batch[r[c < r]] = True  # only earlier-in-batch neighbors count
         dup_vs_res = np.zeros(B, bool)
-        if self._res is not None:
-            rr, _ = engine.pairwise(
-                sk, self._res, self.cfg, reduce="threshold",
+        if self._res.size:
+            # the reservoir presents its full fixed-shape ring buffer (the
+            # threshold pass compiles once); hits on unfilled slots are
+            # filtered by the live mask
+            res_sk, live = self._res.view()
+            rr, cc = engine.pairwise(
+                sk, res_sk, self.cfg, reduce="threshold",
                 radius=self.threshold, relative=True, estimator="mle",
             )
-            dup_vs_res[rr] = True
+            dup_vs_res[rr[live[cc]]] = True
         keep = ~(dup_in_batch | dup_vs_res)
         kept_idx = np.flatnonzero(keep)
         kept = LpSketch(U=sk.U[kept_idx], moments=sk.moments[kept_idx])
-        if self._res is None:
-            self._res = kept
-        else:
-            self._res = LpSketch(
-                U=jnp.concatenate([self._res.U, kept.U])[-self.reservoir:],
-                moments=jnp.concatenate([self._res.moments, kept.moments])[-self.reservoir:],
-            )
+        self._res.admit(kept)  # FIFO ring: oldest reservoir entries evicted
         stats = {"kept": int(keep.sum()), "dropped": int(B - keep.sum())}
         return jnp.asarray(keep), stats

@@ -1,0 +1,34 @@
+"""``repro.index`` — a segmented, persistent sketch index.
+
+The serving layer between the sketch builder and the streaming engine: the
+corpus lives only as O(nk) sketch state, appended into a preallocated active
+segment (O(batch) ingest, compile-once), sealed into immutable blocks,
+tombstoned on delete, compacted when segments decay, and persisted through
+the checkpoint layer's atomic commit.  Queries fan the engine's fused
+reductions across segments and merge candidates with dense tie-breaking.
+
+  from repro.index import SketchIndex
+  idx = SketchIndex(SketchConfig(p=4, k=128))
+  ids = idx.ingest(rows)                 # -> stable int64 row ids
+  d, nn = idx.query(q, top_k=10)         # -> (dists, row ids)
+  idx.delete(ids[:100]); idx.compact()
+  idx.save("index_dir"); idx2 = SketchIndex.load("index_dir")
+"""
+
+from .query import MicroBatcher, fan_topk, threshold_scan
+from .segment import ActiveSegment, SealedSegment, SketchReservoir
+from .service import IndexConfig, SketchIndex
+from .store import load_index, save_index
+
+__all__ = [
+    "SketchIndex",
+    "IndexConfig",
+    "MicroBatcher",
+    "ActiveSegment",
+    "SealedSegment",
+    "SketchReservoir",
+    "fan_topk",
+    "threshold_scan",
+    "save_index",
+    "load_index",
+]

@@ -1,0 +1,254 @@
+"""Query planning: fan the engine's fused reductions across segments.
+
+``fan_topk`` streams each segment through the engine's strip machinery
+(plain packed-matmul strips or margin-MLE strips) with tombstones masked to
+``+inf`` *after* the strip estimate (``where`` keeps live-row values
+bit-identical), then folds the per-segment candidate lists with the engine's
+``merge_topk``.  Tie-breaking matches a dense ``knn`` over the equivalent
+live corpus exactly: within a segment the engine resolves ties to the lowest
+local column; across segments the running candidate list always precedes the
+newer segment's candidates in the merge concatenation, and segments are
+visited in creation (= ingest) order — so equal distances resolve to the
+earliest-ingested live row, same as dense.
+
+``threshold_scan`` routes the same masked strips through the engine's
+threshold criterion, yielding (query_row, row_id) pairs.
+
+``MicroBatcher`` is the serving front door: concurrent callers' query rows
+are coalesced into one fused engine pass per (top_k, estimator) group — one
+sketch call + one fan per batch instead of one per request.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pairwise import pack_sketch, pairwise_margin_mle
+from repro.core.sketch import LpSketch, SketchConfig
+from repro.engine import EngineConfig, strip_distances
+from repro.engine.reduce import merge_topk, strip_bounds
+
+from .segment import ActiveSegment, SealedSegment
+
+__all__ = ["fan_topk", "threshold_scan", "MicroBatcher"]
+
+_IDX_SENTINEL = np.iinfo(np.int32).max
+
+Segment = Union[ActiveSegment, SealedSegment]
+
+
+def _pack_query(qsk: LpSketch, cfg: SketchConfig, estimator: str):
+    """Query-side factors, computed once per fan (segment-invariant)."""
+    if estimator != "plain":
+        return None
+    Aq, _, nq = pack_sketch(qsk, cfg)
+    return Aq, nq
+
+
+def _segment_strip_fn(qsk: LpSketch, q_packed, seg: Segment,
+                      cfg: SketchConfig, estimator: str, backend: str):
+    """strip(c0, c1) -> (q, c1-c0) masked distance strip for one segment."""
+    mask = seg.mask()
+    if estimator == "plain":
+        if isinstance(seg, ActiveSegment):
+            _, B, nb = pack_sketch(seg.as_sketch(), cfg)
+        else:
+            B, nb = seg.packed(cfg)
+        Aq, nq = q_packed
+
+        def strip(c0: int, c1: int) -> jax.Array:
+            D = strip_distances(Aq, B[c0:c1], nq, nb[c0:c1],
+                                backend=backend, clip=True)
+            return jnp.where(mask[c0:c1][None, :], D, jnp.inf)
+    else:
+        seg_sk = seg.as_sketch() if isinstance(seg, ActiveSegment) else seg.sketch
+
+        def strip(c0: int, c1: int) -> jax.Array:
+            D = pairwise_margin_mle(
+                qsk,
+                LpSketch(U=seg_sk.U[c0:c1], moments=seg_sk.moments[c0:c1]),
+                cfg, clip=True,
+            )
+            return jnp.where(mask[c0:c1][None, :], D, jnp.inf)
+
+    return strip
+
+
+def _segment_rows(seg: Segment) -> int:
+    return seg.capacity if isinstance(seg, ActiveSegment) else seg.n
+
+
+def fan_topk(
+    qsk: LpSketch,
+    segments: Sequence[Segment],
+    cfg: SketchConfig,
+    *,
+    top_k: int,
+    estimator: str = "plain",
+    engine: Optional[EngineConfig] = None,
+) -> Tuple[jax.Array, np.ndarray]:
+    """(distances (q, k), row_ids (q, k)) over all live rows, ascending,
+    k = min(top_k, total live rows).  Dead/padded rows never surface."""
+    if estimator not in ("plain", "mle"):
+        raise ValueError(f"unknown estimator {estimator!r}")
+    backend, _, col_block = (engine or EngineConfig()).resolve()
+    q = qsk.n
+    n_live = sum(seg.live_count for seg in segments)
+    k_out = min(top_k, n_live)
+    if k_out == 0:
+        return (jnp.zeros((q, 0), jnp.float32), np.zeros((q, 0), np.int64))
+
+    # merge in global-position space (segment base + local column): position
+    # order == ingest order, which is the dense corpus's tie-break order
+    total = sum(_segment_rows(s) for s in segments)
+    k_run = min(top_k, total)
+    vals = jnp.full((q, k_run), jnp.inf, jnp.float32)
+    idx = jnp.full((q, k_run), _IDX_SENTINEL, jnp.int32)
+    base = 0
+    id_map: List[np.ndarray] = []
+    q_packed = _pack_query(qsk, cfg, estimator)
+    for seg in segments:
+        n = _segment_rows(seg)
+        strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
+        c = min(k_run, n)
+        for c0, c1 in strip_bounds(n, col_block):
+            D = strip(c0, c1)
+            neg, j = jax.lax.top_k(-D, min(c, c1 - c0))
+            cand_vals = -neg
+            cand_idx = (j + (base + c0)).astype(jnp.int32)
+            vals, idx = merge_topk(vals, idx, cand_vals, cand_idx, k_run)
+        id_map.append(seg.row_ids[:n])
+        base += n
+
+    pos_to_id = np.concatenate(id_map) if id_map else np.zeros(0, np.int64)
+    pos = np.asarray(idx[:, :k_out])
+    return vals[:, :k_out], pos_to_id[pos]
+
+
+def threshold_scan(
+    qsk: LpSketch,
+    segments: Sequence[Segment],
+    cfg: SketchConfig,
+    *,
+    radius: float,
+    relative: bool = False,
+    estimator: str = "plain",
+    engine: Optional[EngineConfig] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(query_rows, row_ids) of live pairs with D < radius (optionally
+    relative to the marginal-norm scale), in (query, ingest-order) order."""
+    backend, _, col_block = (engine or EngineConfig()).resolve()
+    nq_h = np.asarray(qsk.norm_pp(cfg.p))
+    rows_out, ids_out = [], []
+    q_packed = _pack_query(qsk, cfg, estimator)
+    for seg in segments:
+        n = _segment_rows(seg)
+        seg_sk = seg.as_sketch() if isinstance(seg, ActiveSegment) else seg.sketch
+        nb_h = np.asarray(seg_sk.norm_pp(cfg.p))
+        strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
+        ids = seg.row_ids
+        for c0, c1 in strip_bounds(n, col_block):
+            D = np.asarray(strip(c0, c1))
+            if relative:
+                scale = nq_h[:, None] + nb_h[None, c0:c1]
+                hit = D < radius * scale
+            else:
+                hit = D < radius
+            rr, cc = np.nonzero(hit)
+            rows_out.append(rr)
+            ids_out.append(ids[cc + c0])
+    if not rows_out:
+        return np.zeros(0, np.intp), np.zeros(0, np.int64)
+    rows, hit_ids = np.concatenate(rows_out), np.concatenate(ids_out)
+    # (query, ingest-order) sort == the engine's row-major dense contract
+    order = np.lexsort((hit_ids, rows))
+    return rows[order], hit_ids[order]
+
+
+class MicroBatcher:
+    """Coalesce concurrent single/few-row queries into one fused index pass.
+
+    Callers block in ``query``; a request joins the open batch for its
+    (top_k, estimator) group and is flushed when the batch reaches
+    ``max_batch`` rows or ``max_wait_ms`` elapses (whichever first).  One
+    sketch + one segment fan serves the whole batch.
+    """
+
+    def __init__(self, index, *, max_batch: int = 64, max_wait_ms: float = 2.0):
+        self.index = index
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self._lock = threading.Lock()
+        self._groups: dict = {}  # (top_k, estimator) -> _Batch
+        self.batches_run = 0
+        self.rows_served = 0
+
+    class _Batch:
+        def __init__(self):
+            self.rows: List[np.ndarray] = []
+            self.n = 0
+            self.done = threading.Event()
+            self.results = None
+            self.error: Optional[BaseException] = None
+
+    def query(self, rows, top_k: int = 10, estimator: str = "plain"):
+        """(distances (b, k), row_ids (b, k)) for this caller's rows."""
+        rows = np.atleast_2d(np.asarray(rows))
+        key = (top_k, estimator)
+        with self._lock:
+            batch = self._groups.get(key)
+            if batch is None:
+                batch = self._groups[key] = self._Batch()
+            my = batch
+            lo = my.n
+            my.rows.append(rows)
+            my.n += rows.shape[0]
+            full = my.n >= self.max_batch
+            if full:
+                self._groups.pop(key, None)
+        if full:
+            self._run(my, key)
+        elif not my.done.wait(self.max_wait):
+            with self._lock:
+                # whoever times out first claims the flush
+                claimed = self._groups.get(key) is my
+                if claimed:
+                    self._groups.pop(key, None)
+            if claimed:
+                self._run(my, key)
+            my.done.wait()
+        if my.error is not None:
+            raise my.error
+        dists, ids = my.results
+        return dists[lo:lo + rows.shape[0]], ids[lo:lo + rows.shape[0]]
+
+    def _run(self, batch: "_Batch", key) -> None:
+        top_k, estimator = key
+        try:
+            X = np.concatenate(batch.rows, axis=0)
+            batch.results = self.index.query(X, top_k=top_k,
+                                             estimator=estimator)
+            with self._lock:
+                self.batches_run += 1
+                self.rows_served += X.shape[0]
+        except BaseException as e:  # propagate to every waiter, never hang
+            batch.error = e
+            raise
+        finally:
+            batch.done.set()
+
+    def flush(self) -> None:
+        """Flush every open batch (shutdown / test hook)."""
+        with self._lock:
+            pending = list(self._groups.items())
+            self._groups.clear()
+        for key, batch in pending:
+            try:
+                self._run(batch, key)
+            except Exception:
+                pass  # waiters re-raise from batch.error; keep flushing

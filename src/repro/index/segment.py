@@ -1,0 +1,235 @@
+"""Index segments: a preallocated active segment + immutable sealed blocks.
+
+The index's write path never concatenates: the active segment owns
+fixed-shape device buffers (``capacity`` rows of sketch state) and every
+ingest batch is written in place with ``lax.dynamic_update_slice`` at a
+*traced* offset — one compile per batch shape, O(batch) work per call, no
+reallocation.  When the buffer fills, the segment is sealed: trimmed to its
+row count, packed once for the plain-estimator query path, and never written
+again.
+
+Deletes are tombstones: a host-side ``live`` bitmap per segment.  Queries
+mask dead (and, in the active segment, not-yet-written) rows to ``+inf``
+*after* the strip estimate, so live-row values stay bit-identical to the
+dense path and masked rows can never enter a top-k.  Compaction rewrites a
+segment to its live rows only (order preserved — ``jnp.take`` moves bits,
+never recomputes them), padding to ``_MIN_SEGMENT_ROWS`` so no segment ever
+presents a width-1 strip (which XLA lowers as a GEMV with a different
+K-accumulation order than the GEMM columns every other path uses).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pairwise import pack_sketch
+from repro.core.sketch import LpSketch, SketchConfig
+
+__all__ = ["ActiveSegment", "SealedSegment", "SketchReservoir"]
+
+# never present a 1-row segment to the engine: a (n, K) x (K, 1) strip
+# lowers as GEMV, breaking the engine's bit-for-bit contract with dense
+_MIN_SEGMENT_ROWS = 2
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _write_rows(U_buf, M_buf, U_new, M_new, offset):
+    """In-place batch write at a traced row offset (compile-once per batch
+    shape; donated buffers, so no reallocation on backends with donation)."""
+    U_buf = jax.lax.dynamic_update_slice(U_buf, U_new, (offset, 0, 0))
+    M_buf = jax.lax.dynamic_update_slice(M_buf, M_new, (offset, 0))
+    return U_buf, M_buf
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_rows(U_buf, M_buf, U_new, M_new, idx):
+    """Ring-buffer write: rows land at (possibly wrapping) slot indices."""
+    return U_buf.at[idx].set(U_new), M_buf.at[idx].set(M_new)
+
+
+def _pad_rows(sk: LpSketch, n_pad: int) -> LpSketch:
+    if n_pad <= 0:
+        return sk
+    U = jnp.concatenate(
+        [sk.U, jnp.zeros((n_pad, *sk.U.shape[1:]), sk.U.dtype)], axis=0
+    )
+    M = jnp.concatenate(
+        [sk.moments, jnp.zeros((n_pad, sk.moments.shape[1]), sk.moments.dtype)],
+        axis=0,
+    )
+    return LpSketch(U=U, moments=M)
+
+
+class SealedSegment:
+    """An immutable block of sketched rows + tombstone bitmap.
+
+    Packed right factors for the plain estimator are computed once at seal
+    time and cached; the device-side live mask is cached until a delete
+    invalidates it.
+    """
+
+    def __init__(self, sketch: LpSketch, row_ids: np.ndarray,
+                 live: Optional[np.ndarray] = None):
+        n = sketch.n
+        self.sketch = sketch
+        self.row_ids = np.asarray(row_ids, np.int64)
+        if self.row_ids.shape != (n,):
+            raise ValueError(f"row_ids must be ({n},), got {self.row_ids.shape}")
+        self.live = (np.ones(n, bool) if live is None
+                     else np.asarray(live, bool).copy())
+        self._packed = None   # (B, nb) right factors, built lazily per cfg
+        self._mask_dev = None
+
+    @property
+    def n(self) -> int:
+        return self.sketch.n
+
+    @property
+    def live_count(self) -> int:
+        return int(self.live.sum())
+
+    @property
+    def live_fraction(self) -> float:
+        return self.live_count / max(self.n, 1)
+
+    def delete_local(self, local_idx) -> None:
+        self.live[local_idx] = False
+        self._mask_dev = None
+
+    def packed(self, cfg: SketchConfig):
+        """(B, nb): cached right factor + marginal norms for plain strips."""
+        if self._packed is None:
+            _, B, nb = pack_sketch(self.sketch, cfg)
+            self._packed = (B, nb)
+        return self._packed
+
+    def mask(self) -> jax.Array:
+        """(n,) bool device mask — True where the row is live."""
+        if self._mask_dev is None:
+            self._mask_dev = jnp.asarray(self.live)
+        return self._mask_dev
+
+    def compacted(self) -> "SealedSegment":
+        """Live rows only, order preserved, padded (dead) to the engine's
+        minimum strip width.  Bits of live rows are moved, never recomputed,
+        so query results are identical pre/post compaction."""
+        keep = np.flatnonzero(self.live)
+        n_pad = max(_MIN_SEGMENT_ROWS - len(keep), 0)
+        idx = jnp.asarray(keep, jnp.int32)
+        sk = LpSketch(
+            U=jnp.take(self.sketch.U, idx, axis=0),
+            moments=jnp.take(self.sketch.moments, idx, axis=0),
+        )
+        sk = _pad_rows(sk, n_pad)
+        row_ids = np.concatenate([self.row_ids[keep], np.full(n_pad, -1, np.int64)])
+        live = np.concatenate([np.ones(len(keep), bool), np.zeros(n_pad, bool)])
+        return SealedSegment(sk, row_ids, live)
+
+
+class ActiveSegment:
+    """The write head: fixed-capacity device buffers filled left to right.
+
+    Queries see the *full* capacity buffer (shape never changes, so the
+    query path compiles once) with rows past ``size`` masked dead alongside
+    tombstones.
+    """
+
+    def __init__(self, cfg: SketchConfig, capacity: int):
+        if capacity < _MIN_SEGMENT_ROWS:
+            raise ValueError(f"capacity must be >= {_MIN_SEGMENT_ROWS}")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.U = jnp.zeros((capacity, cfg.vectors_per_row, cfg.k),
+                           cfg.projection.dtype)
+        self.moments = jnp.zeros((capacity, cfg.p - 1), jnp.float32)
+        self.row_ids = np.full(capacity, -1, np.int64)
+        self.live = np.zeros(capacity, bool)
+        self.size = 0
+        self._mask_dev = None
+
+    @property
+    def remaining(self) -> int:
+        return self.capacity - self.size
+
+    @property
+    def live_count(self) -> int:
+        return int(self.live.sum())
+
+    def append(self, sk: LpSketch, row_ids: np.ndarray) -> None:
+        b = sk.n
+        if b > self.remaining:
+            raise ValueError(f"batch of {b} exceeds remaining {self.remaining}")
+        self.U, self.moments = _write_rows(
+            self.U, self.moments, sk.U, sk.moments, jnp.int32(self.size)
+        )
+        self.row_ids[self.size:self.size + b] = row_ids
+        self.live[self.size:self.size + b] = True
+        self.size += b
+        self._mask_dev = None
+
+    def delete_local(self, local_idx) -> None:
+        self.live[local_idx] = False
+        self._mask_dev = None
+
+    def mask(self) -> jax.Array:
+        if self._mask_dev is None:
+            self._mask_dev = jnp.asarray(self.live)
+        return self._mask_dev
+
+    def as_sketch(self) -> LpSketch:
+        """Full-capacity view (fixed shape; dead slots are masked at query)."""
+        return LpSketch(U=self.U, moments=self.moments)
+
+    def seal(self) -> SealedSegment:
+        """Freeze: trim to the written rows (one-time shape) and hand off."""
+        n = max(self.size, _MIN_SEGMENT_ROWS)
+        sk = LpSketch(U=self.U[:n], moments=self.moments[:n])
+        return SealedSegment(sk, self.row_ids[:n].copy(), self.live[:n].copy())
+
+
+class SketchReservoir:
+    """Fixed-capacity FIFO ring of sketched rows (dedup's reservoir).
+
+    Admission overwrites the oldest slots in place via a jitted scatter —
+    O(batch) per admit at any reservoir size, vs. the old grow-and-slice
+    concat which reallocated the whole reservoir every batch.
+    """
+
+    def __init__(self, cfg: SketchConfig, capacity: int):
+        if capacity < _MIN_SEGMENT_ROWS:
+            raise ValueError(f"capacity must be >= {_MIN_SEGMENT_ROWS}")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.U = jnp.zeros((capacity, cfg.vectors_per_row, cfg.k),
+                           cfg.projection.dtype)
+        self.moments = jnp.zeros((capacity, cfg.p - 1), jnp.float32)
+        self.count = 0  # total rows ever admitted
+
+    @property
+    def size(self) -> int:
+        return min(self.count, self.capacity)
+
+    def admit(self, sk: LpSketch) -> None:
+        b = sk.n
+        if b == 0:
+            return
+        if b > self.capacity:  # only the newest `capacity` rows can survive
+            sk = LpSketch(U=sk.U[-self.capacity:],
+                          moments=sk.moments[-self.capacity:])
+            self.count += b - self.capacity
+            b = self.capacity
+        idx = (self.count + jnp.arange(b, dtype=jnp.int32)) % self.capacity
+        self.U, self.moments = _scatter_rows(
+            self.U, self.moments, sk.U, sk.moments, idx
+        )
+        self.count += b
+
+    def view(self) -> Tuple[LpSketch, np.ndarray]:
+        """(full-buffer sketch, live mask) — fixed shapes at any fill."""
+        live = np.arange(self.capacity) < self.size
+        return LpSketch(U=self.U, moments=self.moments), live

@@ -1,0 +1,242 @@
+"""``SketchIndex`` — the corpus-scale serving object over segments.
+
+The lifecycle the paper implies but the old in-memory service couldn't
+provide: rows are sketched once at ingest (raw D-dim data is never retained),
+appended into the preallocated active segment, sealed into immutable blocks,
+tombstoned on delete, compacted when a segment's live fraction decays, and
+persisted/restored through the checkpoint layer's atomic-rename commit.
+
+Row identity: every ingested row gets a monotonically increasing int64 id
+(returned by ``ingest``); ``delete`` and query results speak ids, never
+positions, so ids stay stable across seals, compactions, and reloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import LpSketch, SketchConfig, sketch
+from repro.engine import EngineConfig
+
+from .query import fan_topk, threshold_scan
+from .segment import ActiveSegment, SealedSegment
+
+__all__ = ["IndexConfig", "SketchIndex"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Index-level knobs (the sketch itself is configured by SketchConfig).
+
+    Attributes:
+      segment_capacity: rows per segment; the active segment preallocates
+        exactly this many rows of sketch state on device.
+      min_live_frac: ``compact()`` rewrites sealed segments whose live
+        fraction is at or below this threshold.
+    """
+
+    segment_capacity: int = 4096
+    min_live_frac: float = 0.5
+
+    def __post_init__(self):
+        if self.segment_capacity < 2:
+            raise ValueError("segment_capacity must be >= 2")
+        if not 0.0 <= self.min_live_frac <= 1.0:
+            raise ValueError("min_live_frac must be in [0, 1]")
+
+
+class SketchIndex:
+    """Segmented, persistent l_p sketch index: ingest / delete / query."""
+
+    def __init__(self, cfg: SketchConfig, *, seed: int = 0,
+                 index_cfg: Optional[IndexConfig] = None,
+                 engine: Optional[EngineConfig] = None):
+        self.cfg = cfg
+        self.seed = seed
+        self.key = jax.random.key(seed)
+        self.index_cfg = index_cfg or IndexConfig()
+        self.engine = engine
+        self.sealed: List[SealedSegment] = []
+        self.active = ActiveSegment(cfg, self.index_cfg.segment_capacity)
+        self.next_row_id = 0
+        # row id -> (segment index, local row); active segment is index -1
+        self._loc: Dict[int, Tuple[int, int]] = {}
+
+    # ------------------------------------------------------------------ state
+
+    @property
+    def n_live(self) -> int:
+        return sum(s.live_count for s in self.sealed) + self.active.live_count
+
+    @property
+    def n_rows(self) -> int:
+        """Physical rows currently held (live + tombstoned + padding)."""
+        return sum(s.n for s in self.sealed) + self.active.size
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.sealed) + (1 if self.active.size else 0)
+
+    def stats(self) -> dict:
+        return {
+            "live": self.n_live,
+            "rows": self.n_rows,
+            "sealed_segments": len(self.sealed),
+            "active_fill": self.active.size / self.active.capacity,
+            "next_row_id": self.next_row_id,
+        }
+
+    def _segments(self) -> Sequence[Union[ActiveSegment, SealedSegment]]:
+        segs: List[Union[ActiveSegment, SealedSegment]] = list(self.sealed)
+        if self.active.size:
+            segs.append(self.active)
+        return segs
+
+    # ----------------------------------------------------------------- ingest
+
+    def ingest(self, rows: jax.Array) -> np.ndarray:
+        """Sketch and index (n, D) rows; returns their assigned int64 ids."""
+        sk = sketch(jnp.asarray(rows), self.key, self.cfg)
+        return self.ingest_sketch(sk)
+
+    def ingest_sketch(self, sk: LpSketch) -> np.ndarray:
+        """Index pre-sketched rows (must share this index's key + config)."""
+        n = sk.n
+        ids = np.arange(self.next_row_id, self.next_row_id + n, dtype=np.int64)
+        self.next_row_id += n
+        off = 0
+        while off < n:
+            take = min(n - off, self.active.remaining)
+            part = (sk if take == n and off == 0 else
+                    LpSketch(U=sk.U[off:off + take],
+                             moments=sk.moments[off:off + take]))
+            start_local = self.active.size
+            self.active.append(part, ids[off:off + take])
+            for j in range(take):
+                self._loc[int(ids[off + j])] = (-1, start_local + j)
+            off += take
+            if self.active.remaining == 0:
+                self.seal_active()
+        return ids
+
+    def seal_active(self) -> None:
+        """Freeze the active segment and open a fresh one."""
+        if self.active.size == 0:
+            return
+        seg = self.active.seal()
+        seg_idx = len(self.sealed)
+        self.sealed.append(seg)
+        for local, rid in enumerate(seg.row_ids[:seg.n]):
+            if rid >= 0:
+                self._loc[int(rid)] = (seg_idx, local)
+        self.active = ActiveSegment(self.cfg, self.index_cfg.segment_capacity)
+
+    # ----------------------------------------------------------------- delete
+
+    def delete(self, row_ids) -> int:
+        """Tombstone rows by id; returns how many were live before."""
+        removed = 0
+        for rid in np.atleast_1d(np.asarray(row_ids, np.int64)):
+            loc = self._loc.get(int(rid))
+            if loc is None:
+                continue
+            seg_idx, local = loc
+            seg = self.active if seg_idx == -1 else self.sealed[seg_idx]
+            if seg.live[local]:
+                seg.delete_local(local)
+                removed += 1
+        return removed
+
+    def compact(self, min_live_frac: Optional[float] = None) -> int:
+        """Rewrite sealed segments at/below the live-fraction threshold to
+        live rows only (dropping fully-dead segments); returns how many
+        segments were rewritten.  Query results are bit-for-bit unchanged —
+        compaction moves rows, never recomputes estimates."""
+        thr = self.index_cfg.min_live_frac if min_live_frac is None else min_live_frac
+        rewritten = 0
+        out: List[SealedSegment] = []
+        for seg in self.sealed:
+            if seg.live_fraction > thr:
+                out.append(seg)
+                continue
+            rewritten += 1
+            if seg.live_count == 0:
+                continue  # fully dead: drop the segment (_reindex forgets it)
+            out.append(seg.compacted())
+        self.sealed = out
+        self._reindex()
+        return rewritten
+
+    def _reindex(self) -> None:
+        self._loc = {}
+        for seg_idx, seg in enumerate(self.sealed):
+            for local, rid in enumerate(seg.row_ids[:seg.n]):
+                if rid >= 0 and seg.live[local]:
+                    self._loc[int(rid)] = (seg_idx, local)
+        for local in range(self.active.size):
+            rid = int(self.active.row_ids[local])
+            if rid >= 0:
+                self._loc[rid] = (-1, local)
+
+    # ------------------------------------------------------------------ query
+
+    def query(self, rows: jax.Array, top_k: int = 10,
+              estimator: str = "plain") -> Tuple[jax.Array, np.ndarray]:
+        """Top-k live neighbors of (q, D) query rows.
+
+        Returns (distances (q, k), row_ids (q, k)), ascending,
+        k = min(top_k, live rows).  ``estimator="mle"`` routes margin-MLE
+        strips (Lemma 4) instead of plain packed-matmul strips.
+        """
+        qsk = sketch(jnp.asarray(rows), self.key, self.cfg)
+        return self.query_sketch(qsk, top_k=top_k, estimator=estimator)
+
+    def query_sketch(self, qsk: LpSketch, top_k: int = 10,
+                     estimator: str = "plain"):
+        return fan_topk(qsk, self._segments(), self.cfg,
+                        top_k=top_k, estimator=estimator, engine=self.engine)
+
+    def query_threshold(self, rows: jax.Array, radius: float, *,
+                        relative: bool = False, estimator: str = "plain"):
+        """(query_rows, row_ids) of live rows with D < radius."""
+        qsk = sketch(jnp.asarray(rows), self.key, self.cfg)
+        return threshold_scan(qsk, self._segments(), self.cfg, radius=radius,
+                              relative=relative, estimator=estimator,
+                              engine=self.engine)
+
+    # ------------------------------------------------------------ persistence
+
+    def save(self, path: str) -> str:
+        from .store import save_index  # local import: store imports service
+        return save_index(path, self)
+
+    @classmethod
+    def load(cls, path: str, *, engine: Optional[EngineConfig] = None
+             ) -> "SketchIndex":
+        from .store import load_index
+        return load_index(path, engine=engine)
+
+    # ----------------------------------------------------- corpus export
+
+    def live_sketch(self) -> LpSketch:
+        """Materialize the live corpus as one LpSketch in ingest order
+        (compat/debug surface — O(live) device work)."""
+        Us, Ms = [], []
+        for seg in self._segments():
+            if isinstance(seg, ActiveSegment):
+                sk, live = seg.as_sketch(), seg.mask()
+            else:
+                sk, live = seg.sketch, seg.mask()
+            keep = jnp.asarray(np.flatnonzero(np.asarray(live)), jnp.int32)
+            Us.append(jnp.take(sk.U, keep, axis=0))
+            Ms.append(jnp.take(sk.moments, keep, axis=0))
+        if not Us:
+            nvec = self.cfg.vectors_per_row
+            return LpSketch(U=jnp.zeros((0, nvec, self.cfg.k)),
+                            moments=jnp.zeros((0, self.cfg.p - 1)))
+        return LpSketch(U=jnp.concatenate(Us), moments=jnp.concatenate(Ms))

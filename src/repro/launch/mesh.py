@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
 from repro.configs.base import TrainKnobs
 from repro.parallel.sharding import Parallel, ShardingRules
 
@@ -14,8 +15,7 @@ __all__ = ["make_production_mesh", "make_parallel"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_parallel(mesh=None, *, knobs: TrainKnobs = TrainKnobs(),

@@ -13,6 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.compat import make_mesh
 from repro.configs.base import TrainKnobs, reduced
 from repro.configs.registry import get_config
 from repro.launch.mesh import make_parallel
@@ -57,8 +58,7 @@ def main(argv=None):
     knobs = TrainKnobs(remat="none", sequence_parallel=False,
                        attn_q_chunk=64, ssd_chunk=32)
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((ndev, 1), ("data", "model"))
     par = make_parallel(mesh, knobs=knobs, constrain=False)
     model = build_model(cfg, par, knobs)
     params = model.init(jax.random.key(0))

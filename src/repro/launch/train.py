@@ -16,6 +16,7 @@ import json
 import jax
 import jax.numpy as jnp
 
+from repro.compat import make_mesh
 from repro.checkpoint.checkpointer import CheckpointManager
 from repro.configs.base import ShapeConfig, TrainKnobs, reduced
 from repro.configs.registry import get_config
@@ -51,8 +52,7 @@ def main(argv=None):
                        learning_rate=args.lr, attn_q_chunk=64, vocab_chunk=64,
                        ssd_chunk=32)
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((ndev, 1), ("data", "model"))
     par = make_parallel(mesh, knobs=knobs, constrain=ndev > 1)
     model = build_model(cfg, par, knobs)
     shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import Parallel
 
@@ -228,7 +229,7 @@ def decode_attention(
         bspec = P(batch_axes) if batch_axes else P()
         qspec = P(batch_axes, None, None) if batch_axes else P(None, None, None)
         cspec = P(batch_axes, mdl, None, None) if batch_axes else P(None, mdl, None, None)
-        o, cache_k, cache_v = jax.shard_map(
+        o, cache_k, cache_v = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(qspec, qspec, qspec, cspec, cspec, P()),
             out_specs=(qspec, cspec, cspec),

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.parallel.sharding import Parallel
 
 __all__ = ["sharded_embed_lookup", "sharded_ce_loss"]
@@ -69,7 +71,7 @@ def sharded_embed_lookup(par: Parallel, emb: jax.Array, tokens: jax.Array):
         x = jnp.take(emb_l, safe, axis=0) * mask[..., None].astype(emb_l.dtype)
         return jax.lax.psum(x, "model")
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=par.mesh,
         in_specs=(emb_spec, P(bx, None)),
         out_specs=P(bx, None, None),
@@ -119,7 +121,7 @@ def sharded_ce_loss(par: Parallel, hidden: jax.Array, w: jax.Array,
 
     # note: lse/ll are replicated over model after psums; summing locally and
     # psumming over (bx, model) counts each row model_size times -> divide.
-    return jax.shard_map(
+    return shard_map(
         local, mesh=par.mesh,
         in_specs=(P(bx, None, None), w_spec, P(bx, None)),
         out_specs=P(),

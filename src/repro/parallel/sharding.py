@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 __all__ = ["ShardingRules", "Parallel", "logical_to_spec", "shard_act"]
 
 # logical axis -> mesh axis (or tuple of mesh axes) -- None = replicated
@@ -194,7 +196,7 @@ def tp_out_project(par: Parallel, h: jax.Array, w: jax.Array) -> jax.Array:
         part = jax.numpy.einsum("bsf,fd->bsd", h_l, w_l)
         return jax.lax.psum_scatter(part, mdl, scatter_dimension=1, tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=par.mesh,
         in_specs=(P(bspec, None, mdl), w_spec, ),
         out_specs=P(bspec, mdl, None),

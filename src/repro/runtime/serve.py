@@ -8,7 +8,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import LpSketch, SketchConfig, knn, sketch
+from repro.core import LpSketch, SketchConfig
+from repro.index import IndexConfig, SketchIndex
 
 __all__ = ["generate", "SketchKnnService"]
 
@@ -42,28 +43,58 @@ def generate(model, params, prompt_tokens: jax.Array, max_new: int,
 class SketchKnnService:
     """The paper's headline application as a service: approximate l_p KNN
     over a sketched corpus.  The corpus never needs its raw D-dim rows after
-    ingestion — only (p-1)k sketch dims + p-1 moments per row (O(nk) space)."""
+    ingestion — only (p-1)k sketch dims + p-1 moments per row (O(nk) space).
+
+    Thin shim over ``repro.index.SketchIndex``: ingest appends into the
+    index's preallocated active segment (O(batch), no concat, compile-once)
+    and queries fan the engine's fused top-k across segments; the shim keeps
+    the original call surface and adds delete / persistence passthroughs.
+    """
 
     cfg: SketchConfig
     seed: int = 0
+    segment_capacity: int = 4096
 
     def __post_init__(self):
-        self.key = jax.random.key(self.seed)
-        self.corpus: LpSketch | None = None
-        self.n_ingested = 0
+        self.index = SketchIndex(
+            self.cfg, seed=self.seed,
+            index_cfg=IndexConfig(segment_capacity=self.segment_capacity))
+        self.key = self.index.key
+
+    @property
+    def n_ingested(self) -> int:
+        return self.index.next_row_id
+
+    @property
+    def corpus(self) -> LpSketch | None:
+        """The live corpus as one sketch (legacy surface; O(live) gather)."""
+        if self.index.n_live == 0:
+            return None
+        return self.index.live_sketch()
 
     def ingest(self, rows: jax.Array):
-        sk = sketch(rows, self.key, self.cfg)
-        if self.corpus is None:
-            self.corpus = sk
-        else:
-            self.corpus = LpSketch(
-                U=jnp.concatenate([self.corpus.U, sk.U]),
-                moments=jnp.concatenate([self.corpus.moments, sk.moments]))
-        self.n_ingested += rows.shape[0]
+        return self.index.ingest(rows)
+
+    def delete(self, row_ids) -> int:
+        return self.index.delete(row_ids)
 
     def query(self, rows: jax.Array, top_k: int = 10, mle: bool = False):
-        if self.corpus is None:
+        if self.index.n_live == 0:
             raise RuntimeError("empty corpus")
-        qs = sketch(rows, self.key, self.cfg)
-        return knn(qs, self.corpus, self.cfg, top_k=top_k, mle=mle)
+        qs = jnp.asarray(rows)
+        return self.index.query(qs, top_k=top_k,
+                                estimator="mle" if mle else "plain")
+
+    def save(self, path: str) -> str:
+        return self.index.save(path)
+
+    @classmethod
+    def load(cls, path: str) -> "SketchKnnService":
+        index = SketchIndex.load(path)
+        svc = cls.__new__(cls)
+        svc.cfg = index.cfg
+        svc.seed = index.seed
+        svc.segment_capacity = index.index_cfg.segment_capacity
+        svc.index = index
+        svc.key = index.key
+        return svc

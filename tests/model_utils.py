@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TrainKnobs, reduced
+from repro.compat import make_mesh
 from repro.configs.registry import get_config
 from repro.models import build_model
 from repro.parallel.sharding import Parallel, ShardingRules
@@ -12,8 +13,7 @@ KNOBS = TrainKnobs(remat="none", attn_q_chunk=16, vocab_chunk=64, ssd_chunk=8)
 
 
 def tiny_parallel():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     return Parallel(mesh=mesh, rules=ShardingRules.default(), constrain=False)
 
 

@@ -19,9 +19,9 @@ _CHILD = textwrap.dedent(
     import numpy as np
     from repro.core import (SketchConfig, sketch, sketch_sharded, pairwise_sharded,
                             pairwise_distances, knn, knn_sharded)
+    from repro.compat import make_mesh
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     KEY = jax.random.key(17)
     cfg = SketchConfig(p=4, k=32, strategy="basic", block_d=64)
     X = jax.random.uniform(jax.random.key(1), (16, 256))
@@ -45,6 +45,16 @@ _CHILD = textwrap.dedent(
     np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=2e-3, atol=1e-3)
     print("KNN_OK")
 
+    # threshold reduce through the sharded path == engine threshold
+    from repro import engine
+    r0, c0 = engine.pairwise(ref, None, cfg, reduce="threshold", radius=0.15,
+                             relative=True)
+    r1, c1 = pairwise_sharded(dist, cfg, mesh, reduce="threshold", radius=0.15,
+                              relative=True)
+    np.testing.assert_array_equal(r0, r1)
+    np.testing.assert_array_equal(c0, c1)
+    print("THRESHOLD_OK")
+
     # alternative strategy too
     cfga = SketchConfig(p=4, k=32, strategy="alternative", block_d=64)
     refa = sketch(X, KEY, cfga)
@@ -65,5 +75,5 @@ def test_distributed_matches_single_device():
         timeout=600,
     )
     assert res.returncode == 0, res.stdout + res.stderr
-    for tag in ("SKETCH_OK", "PAIRWISE_OK", "KNN_OK", "ALT_OK"):
+    for tag in ("SKETCH_OK", "PAIRWISE_OK", "KNN_OK", "THRESHOLD_OK", "ALT_OK"):
         assert tag in res.stdout, res.stdout + res.stderr

@@ -47,9 +47,9 @@ _ELASTIC_CHILD = textwrap.dedent(
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint.checkpointer import save_checkpoint, restore_checkpoint
+    from repro.compat import make_mesh
 
-    mesh = jax.make_mesh((%d, %d), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((%d, %d), ("data", "model"))
     sh = NamedSharding(mesh, P("data", "model"))
     state = {"w": jax.device_put(
         jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16), sh)}

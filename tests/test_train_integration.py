@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.checkpointer import CheckpointManager
+from repro.compat import make_mesh
 from repro.configs.base import ModelConfig, ShapeConfig, TrainKnobs
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_parallel
@@ -22,8 +23,7 @@ def _setup(tmp_path, steps=6, interval=3, sched_total=6):
                       dtype="float32")
     knobs = TrainKnobs(microbatches=1, remat="none", sequence_parallel=False,
                        attn_q_chunk=32, vocab_chunk=32, learning_rate=1e-2)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     par = make_parallel(mesh, knobs=knobs, constrain=False)
     model = build_model(cfg, par, knobs)
     step_fn, _ = build_train_step(model, knobs, ShapeConfig("t", 32, 4, "train"),
@@ -75,8 +75,7 @@ def test_generate_roundtrip():
                       num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=128,
                       dtype="float32")
     knobs = TrainKnobs(remat="none", sequence_parallel=False, attn_q_chunk=16)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     par = make_parallel(mesh, knobs=knobs, constrain=False)
     model = build_model(cfg, par, knobs)
     params = model.init(jax.random.key(0))
