@@ -2,14 +2,18 @@
 
 Emits the harness CSV rows (name,us_per_call,derived):
 
-  index_ingest   us per ingest(batch) call    derived = rows_per_s
-  index_query    us per query(top_k) call     derived = p50_ms|p95_ms
-  index_query_mb us per micro-batched row     derived = rows_per_s (batched)
+  index_ingest        us per ingest(batch) call    derived = rows_per_s
+  index_query         us per query(top_k) call     derived = p50_ms|p95_ms
+  index_query_mb      us per micro-batched row     derived = rows_per_s (batched)
+  index_query_sharded us per sharded query call    derived = p50_ms|shards
+                      (with --mesh / REPRO_BENCH_MESH=1: segments spread over
+                      a 1xN serving mesh, two-stage fan)
 
 REPRO_BENCH_TINY=1 shrinks shapes for the CI smoke job.
 """
 
 import os
+import sys
 import time
 
 import jax.numpy as jnp
@@ -17,9 +21,13 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import SketchConfig
-from repro.index import IndexConfig, SketchIndex
+from repro.index import IndexConfig, ShardedSketchIndex, SketchIndex
 
 TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+
+
+def _mesh_enabled() -> bool:
+    return "--mesh" in sys.argv or os.environ.get("REPRO_BENCH_MESH") == "1"
 
 
 def run():
@@ -62,12 +70,39 @@ def run():
         index.query(Qb, top_k=top_k)
     per_row_us = (time.perf_counter() - t0) / (reps * Qb.shape[0]) * 1e6
 
-    emit([
+    rows = [
         ("index_ingest", ingest_us, f"rows_per_s={rows_per_s:.0f}"),
         ("index_query", p50 * 1e3, f"p50_ms={p50:.2f}|p95_ms={p95:.2f}"),
         ("index_query_mb", per_row_us,
          f"rows_per_s={1e6 / max(per_row_us, 1e-9):.0f}"),
-    ])
+    ]
+
+    if _mesh_enabled():
+        # sharded smoke: same corpus spread over the 1xN serving mesh via
+        # the two-stage fan; answers must match the single-host index
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh()
+        sharded = ShardedSketchIndex(
+            SketchConfig(p=4, k=k, block_d=min(1024, d)),
+            index_cfg=IndexConfig(segment_capacity=cap), mesh=mesh,
+        )
+        for lo in range(0, n, batch):
+            sharded.ingest(jnp.asarray(X[lo:lo + batch]))
+        want = index.query(Q, top_k=top_k)
+        got = sharded.query(Q, top_k=top_k)  # warmup + conformance check
+        assert np.array_equal(np.asarray(want[0]), np.asarray(got[0]))
+        assert np.array_equal(want[1], got[1])
+        lat = []
+        for _ in range(3 if TINY else 10):
+            t0 = time.perf_counter()
+            sharded.query(Q, top_k=top_k)
+            lat.append((time.perf_counter() - t0) * 1e3)
+        p50s = float(np.percentile(np.asarray(lat), 50))
+        rows.append(("index_query_sharded", p50s * 1e3,
+                     f"p50_ms={p50s:.2f}|shards={sharded.n_shards}"))
+
+    emit(rows)
 
 
 if __name__ == "__main__":

@@ -26,7 +26,10 @@ MODULES = [
 def main() -> None:
     print("name,us_per_call,derived")
     failed = []
-    only = sys.argv[1:] or None
+    # "--flags" are module options (read by the modules from sys.argv, e.g.
+    # index_serving's --mesh), not selectors: `run.py --mesh` alone must
+    # still run every module rather than silently matching none
+    only = [a for a in sys.argv[1:] if not a.startswith("--")] or None
     for mod in MODULES:
         if only and not any(sel in mod for sel in only):
             continue

@@ -32,11 +32,29 @@ from .decomposition import power_moments
 from .pairwise import pack_sketch
 from .sketch import LpSketch, SketchConfig, sketch
 
-__all__ = ["sketch_sharded", "pairwise_sharded", "knn_sharded"]
+__all__ = ["sketch_sharded", "pairwise_sharded", "knn_sharded", "mesh_shard_devices"]
 
 
 def _tuple(axes) -> tuple:
     return tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+
+
+def mesh_shard_devices(mesh: Mesh, data_axes: Sequence[str] | str = "data"):
+    """Ordered per-shard device list for a mesh's data axes.
+
+    Flattens ``data_axes`` in row-major order (the same order
+    ``jax.lax.axis_index`` composes in ``knn_sharded``) and takes the first
+    device along every other axis — shard i of a segment placement and shard
+    i of a ``shard_map`` fan land on the same physical device.
+    """
+    data_axes = _tuple(data_axes)
+    names = list(mesh.axis_names)
+    perm = [names.index(a) for a in data_axes] + [
+        i for i, n in enumerate(names) if n not in data_axes
+    ]
+    arr = np.transpose(mesh.devices, perm)
+    n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+    return list(arr.reshape(n_shards, -1)[:, 0])
 
 
 def sketch_sharded(
@@ -205,10 +223,11 @@ def knn_sharded(
     Each shard streams its local strip through the engine's fused top-k
     (col_block columns at a time — the full (q, n_loc) block never
     materializes); the (small) candidate lists are all-gathered and
-    re-ranked — a standard two-stage distributed ANN reduce.
+    re-ranked with ties broken by global index — a standard two-stage
+    distributed ANN reduce whose tie-breaking matches the dense path.
     Returns (distances (q, top_k), global indices (q, top_k)).
     """
-    from repro.engine import EngineConfig, streaming_topk  # lazy: avoids cycle
+    from repro.engine import EngineConfig, rerank_topk, streaming_topk  # lazy: avoids cycle
 
     data_axes = _tuple(data_axes)
     Aq, _, nq = pack_sketch(queries, cfg)
@@ -229,13 +248,14 @@ def knn_sharded(
         for ax in data_axes[1:]:
             shard = shard * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
         gidx = idx + shard * nloc
-        # gather candidates from every shard and re-rank
+        # gather candidates from every shard and re-rank; the (value, index)
+        # lexsort keeps ties on the dense contract (lowest global index wins)
+        # no matter the gather order
         negs, gidxs = neg, gidx
         for ax in data_axes:
             negs = jax.lax.all_gather(negs, ax, axis=1, tiled=True)
             gidxs = jax.lax.all_gather(gidxs, ax, axis=1, tiled=True)
-        neg2, pos = jax.lax.top_k(negs, top_k)
-        return -neg2, jnp.take_along_axis(gidxs, pos, axis=1)
+        return rerank_topk(-negs, gidxs, top_k)
 
     return shard_map(
         local_topk,

@@ -9,7 +9,13 @@
 from .api import pairwise
 from .backends import strip_distances
 from .config import BACKENDS, EngineConfig, default_backend
-from .reduce import merge_topk, streaming_topk, streaming_topk_strips, strip_bounds
+from .reduce import (
+    merge_topk,
+    rerank_topk,
+    streaming_topk,
+    streaming_topk_strips,
+    strip_bounds,
+)
 
 __all__ = [
     "pairwise",
@@ -18,6 +24,7 @@ __all__ = [
     "BACKENDS",
     "default_backend",
     "merge_topk",
+    "rerank_topk",
     "streaming_topk",
     "streaming_topk_strips",
     "strip_bounds",

@@ -20,7 +20,13 @@ import jax.numpy as jnp
 
 from .backends import strip_distances
 
-__all__ = ["streaming_topk", "streaming_topk_strips", "merge_topk", "strip_bounds"]
+__all__ = [
+    "streaming_topk",
+    "streaming_topk_strips",
+    "merge_topk",
+    "rerank_topk",
+    "strip_bounds",
+]
 
 _IDX_SENTINEL = jnp.iinfo(jnp.int32).max
 
@@ -56,6 +62,23 @@ def merge_topk(vals, idx, cand_vals, cand_idx, k: int):
     i = jnp.concatenate([idx, cand_idx], axis=1)
     neg, pos = jax.lax.top_k(-v, k)
     return -neg, jnp.take_along_axis(i, pos, axis=1)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def rerank_topk(vals, idx, k: int):
+    """Final (rows, C) -> (rows, k) re-rank with ties broken by LOWEST index.
+
+    ``merge_topk`` resolves ties positionally, which matches dense only while
+    the concatenation order tracks global column order (the streaming-strip
+    invariant).  A two-stage distributed fan breaks that invariant: candidate
+    lists arrive grouped by shard, and round-robin segment placement means
+    shard order is not position order.  Sorting each row by (value, index)
+    restores the dense contract — equal distances resolve to the smallest
+    global position — regardless of the order candidates were gathered in.
+    """
+    order = jnp.lexsort((idx, vals), axis=-1)
+    return (jnp.take_along_axis(vals, order[:, :k], axis=1),
+            jnp.take_along_axis(idx, order[:, :k], axis=1))
 
 
 def streaming_topk_strips(

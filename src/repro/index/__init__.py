@@ -13,22 +13,32 @@ reductions across segments and merge candidates with dense tie-breaking.
   d, nn = idx.query(q, top_k=10)         # -> (dists, row ids)
   idx.delete(ids[:100]); idx.compact()
   idx.save("index_dir"); idx2 = SketchIndex.load("index_dir")
+
+``ShardedSketchIndex`` is the same lifecycle with sealed segments placed
+across a device mesh and queries fanned through the two-stage reduce
+(bit-identical results); ``compact_async`` on either class rebuilds decayed
+segments off the query path and swaps them in atomically.
 """
 
 from .query import MicroBatcher, fan_topk, threshold_scan
 from .segment import ActiveSegment, SealedSegment, SketchReservoir
-from .service import IndexConfig, SketchIndex
+from .service import CompactionHandle, IndexConfig, SketchIndex
+from .sharded import ShardedSketchIndex, sharded_fan_topk, sharded_threshold_scan
 from .store import load_index, save_index
 
 __all__ = [
     "SketchIndex",
+    "ShardedSketchIndex",
     "IndexConfig",
+    "CompactionHandle",
     "MicroBatcher",
     "ActiveSegment",
     "SealedSegment",
     "SketchReservoir",
     "fan_topk",
     "threshold_scan",
+    "sharded_fan_topk",
+    "sharded_threshold_scan",
     "save_index",
     "load_index",
 ]

@@ -83,6 +83,60 @@ def _segment_rows(seg: Segment) -> int:
     return seg.capacity if isinstance(seg, ActiveSegment) else seg.n
 
 
+def _fold_segment_topk(vals, idx, qsk, q_packed, seg: Segment,
+                       cfg: SketchConfig, estimator: str, backend: str,
+                       col_block: int, base: int, k: int):
+    """Fold one segment's strips into a running (q, k) candidate list, with
+    columns globalized at ``base``.  The single-host fan and the sharded
+    stage-1 fans both run THIS loop, so their per-segment candidates are
+    identical by construction."""
+    n = _segment_rows(seg)
+    strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
+    c = min(k, n)
+    for c0, c1 in strip_bounds(n, col_block):
+        D = strip(c0, c1)
+        neg, j = jax.lax.top_k(-D, min(c, c1 - c0))
+        cand_idx = (j + (base + c0)).astype(jnp.int32)
+        vals, idx = merge_topk(vals, idx, -neg, cand_idx, k)
+    return vals, idx
+
+
+def _segment_threshold_hits(qsk, q_packed, seg: Segment, cfg: SketchConfig,
+                            estimator: str, backend: str, col_block: int,
+                            nq_h: np.ndarray, radius: float, relative: bool):
+    """One segment's (query_rows, row_ids) hit pairs, unsorted.  Shared by
+    the single-host and sharded threshold scans — one copy of the radius
+    criterion and the masking contract."""
+    n = _segment_rows(seg)
+    seg_sk = seg.as_sketch() if isinstance(seg, ActiveSegment) else seg.sketch
+    nb_h = np.asarray(seg_sk.norm_pp(cfg.p))
+    strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
+    ids = seg.row_ids
+    rows_out, ids_out = [], []
+    for c0, c1 in strip_bounds(n, col_block):
+        D = np.asarray(strip(c0, c1))
+        if relative:
+            scale = nq_h[:, None] + nb_h[None, c0:c1]
+            hit = D < radius * scale
+        else:
+            hit = D < radius
+        rr, cc = np.nonzero(hit)
+        rows_out.append(rr)
+        ids_out.append(ids[cc + c0])
+    return rows_out, ids_out
+
+
+def _merge_threshold_hits(rows_out, ids_out):
+    """Fold collected per-segment hits into (query, ingest-order) order —
+    the engine's row-major dense contract (ids are monotone in ingest
+    position, so the id sort IS the position sort)."""
+    if not rows_out:
+        return np.zeros(0, np.intp), np.zeros(0, np.int64)
+    rows, hit_ids = np.concatenate(rows_out), np.concatenate(ids_out)
+    order = np.lexsort((hit_ids, rows))
+    return rows[order], hit_ids[order]
+
+
 def fan_topk(
     qsk: LpSketch,
     segments: Sequence[Segment],
@@ -114,14 +168,9 @@ def fan_topk(
     q_packed = _pack_query(qsk, cfg, estimator)
     for seg in segments:
         n = _segment_rows(seg)
-        strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
-        c = min(k_run, n)
-        for c0, c1 in strip_bounds(n, col_block):
-            D = strip(c0, c1)
-            neg, j = jax.lax.top_k(-D, min(c, c1 - c0))
-            cand_vals = -neg
-            cand_idx = (j + (base + c0)).astype(jnp.int32)
-            vals, idx = merge_topk(vals, idx, cand_vals, cand_idx, k_run)
+        vals, idx = _fold_segment_topk(vals, idx, qsk, q_packed, seg, cfg,
+                                       estimator, backend, col_block,
+                                       base, k_run)
         id_map.append(seg.row_ids[:n])
         base += n
 
@@ -147,27 +196,12 @@ def threshold_scan(
     rows_out, ids_out = [], []
     q_packed = _pack_query(qsk, cfg, estimator)
     for seg in segments:
-        n = _segment_rows(seg)
-        seg_sk = seg.as_sketch() if isinstance(seg, ActiveSegment) else seg.sketch
-        nb_h = np.asarray(seg_sk.norm_pp(cfg.p))
-        strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
-        ids = seg.row_ids
-        for c0, c1 in strip_bounds(n, col_block):
-            D = np.asarray(strip(c0, c1))
-            if relative:
-                scale = nq_h[:, None] + nb_h[None, c0:c1]
-                hit = D < radius * scale
-            else:
-                hit = D < radius
-            rr, cc = np.nonzero(hit)
-            rows_out.append(rr)
-            ids_out.append(ids[cc + c0])
-    if not rows_out:
-        return np.zeros(0, np.intp), np.zeros(0, np.int64)
-    rows, hit_ids = np.concatenate(rows_out), np.concatenate(ids_out)
-    # (query, ingest-order) sort == the engine's row-major dense contract
-    order = np.lexsort((hit_ids, rows))
-    return rows[order], hit_ids[order]
+        rr, ii = _segment_threshold_hits(qsk, q_packed, seg, cfg, estimator,
+                                         backend, col_block, nq_h, radius,
+                                         relative)
+        rows_out.extend(rr)
+        ids_out.extend(ii)
+    return _merge_threshold_hits(rows_out, ids_out)
 
 
 class MicroBatcher:
@@ -199,6 +233,12 @@ class MicroBatcher:
     def query(self, rows, top_k: int = 10, estimator: str = "plain"):
         """(distances (b, k), row_ids (b, k)) for this caller's rows."""
         rows = np.atleast_2d(np.asarray(rows))
+        if rows.shape[0] == 0:
+            # empty request: answer immediately — joining a batch would push
+            # a degenerate 0-row strip through the engine fan
+            k_out = min(top_k, self.index.n_live)
+            return (jnp.zeros((0, k_out), jnp.float32),
+                    np.zeros((0, k_out), np.int64))
         key = (top_k, estimator)
         with self._lock:
             batch = self._groups.get(key)

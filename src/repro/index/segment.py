@@ -82,6 +82,7 @@ class SealedSegment:
             raise ValueError(f"row_ids must be ({n},), got {self.row_ids.shape}")
         self.live = (np.ones(n, bool) if live is None
                      else np.asarray(live, bool).copy())
+        self.shard = None     # placement tag (set by sharded indexes)
         self._packed = None   # (B, nb) right factors, built lazily per cfg
         self._mask_dev = None
 
@@ -114,11 +115,16 @@ class SealedSegment:
             self._mask_dev = jnp.asarray(self.live)
         return self._mask_dev
 
-    def compacted(self) -> "SealedSegment":
+    def compacted(self, live: Optional[np.ndarray] = None) -> "SealedSegment":
         """Live rows only, order preserved, padded (dead) to the engine's
         minimum strip width.  Bits of live rows are moved, never recomputed,
-        so query results are identical pre/post compaction."""
-        keep = np.flatnonzero(self.live)
+        so query results are identical pre/post compaction.
+
+        ``live`` overrides the segment's current bitmap with a snapshot —
+        the background compactor builds replacements from a snapshot taken
+        off the query path and replays any tombstones that landed later at
+        swap time."""
+        keep = np.flatnonzero(self.live if live is None else live)
         n_pad = max(_MIN_SEGMENT_ROWS - len(keep), 0)
         idx = jnp.asarray(keep, jnp.int32)
         sk = LpSketch(
@@ -127,8 +133,8 @@ class SealedSegment:
         )
         sk = _pad_rows(sk, n_pad)
         row_ids = np.concatenate([self.row_ids[keep], np.full(n_pad, -1, np.int64)])
-        live = np.concatenate([np.ones(len(keep), bool), np.zeros(n_pad, bool)])
-        return SealedSegment(sk, row_ids, live)
+        live_out = np.concatenate([np.ones(len(keep), bool), np.zeros(n_pad, bool)])
+        return SealedSegment(sk, row_ids, live_out)
 
 
 class ActiveSegment:

@@ -14,6 +14,7 @@ positions, so ids stay stable across seals, compactions, and reloads.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -26,7 +27,7 @@ from repro.engine import EngineConfig
 from .query import fan_topk, threshold_scan
 from .segment import ActiveSegment, SealedSegment
 
-__all__ = ["IndexConfig", "SketchIndex"]
+__all__ = ["IndexConfig", "SketchIndex", "CompactionHandle"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,36 @@ class IndexConfig:
             raise ValueError("min_live_frac must be in [0, 1]")
 
 
+class CompactionHandle:
+    """Join handle for a background compaction pass.
+
+    ``join()`` blocks until the replacement segments are built *and* swapped
+    in, then returns how many segments were rewritten (re-raising any build
+    error).  The swap itself is atomic under the index lock: a query either
+    sees the whole pre-compaction segment list or the whole post-compaction
+    one, never a mix."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self._result: int = 0
+        self._error: Optional[BaseException] = None
+        self._finished = False  # set by the worker, never inferred from the
+        #                         thread state (an unstarted thread reads as
+        #                         not-alive, which would look "done")
+
+    @property
+    def done(self) -> bool:
+        return self._finished
+
+    def join(self, timeout: Optional[float] = None) -> int:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("background compaction still running")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
 class SketchIndex:
     """Segmented, persistent l_p sketch index: ingest / delete / query."""
 
@@ -66,6 +97,11 @@ class SketchIndex:
         self.next_row_id = 0
         # row id -> (segment index, local row); active segment is index -1
         self._loc: Dict[int, Tuple[int, int]] = {}
+        # guards the segment list + id map against the background compactor;
+        # queries snapshot the list under it, the compactor swaps under it
+        self._lock = threading.RLock()
+        self.generation = 0  # bumped on every atomic segment-list flip
+        self._compaction: Optional[CompactionHandle] = None
 
     # ------------------------------------------------------------------ state
 
@@ -89,13 +125,29 @@ class SketchIndex:
             "sealed_segments": len(self.sealed),
             "active_fill": self.active.size / self.active.capacity,
             "next_row_id": self.next_row_id,
+            "generation": self.generation,
+            "compacting": bool(self._compaction and not self._compaction.done),
         }
 
     def _segments(self) -> Sequence[Union[ActiveSegment, SealedSegment]]:
-        segs: List[Union[ActiveSegment, SealedSegment]] = list(self.sealed)
-        if self.active.size:
-            segs.append(self.active)
-        return segs
+        """Consistent snapshot of the segment list (atomic vs. the swap)."""
+        with self._lock:
+            segs: List[Union[ActiveSegment, SealedSegment]] = list(self.sealed)
+            if self.active.size:
+                segs.append(self.active)
+            return segs
+
+    # ---------------------------------------------------------- placement
+    # Hooks the sharded index overrides: the base index keeps every segment
+    # wherever jax put it and tags no shard.
+
+    def _shard_for_new_segment(self) -> Optional[int]:
+        return None
+
+    def _place_segment(self, seg: SealedSegment,
+                       shard: Optional[int] = None) -> SealedSegment:
+        seg.shard = shard
+        return seg
 
     # ----------------------------------------------------------------- ingest
 
@@ -106,71 +158,163 @@ class SketchIndex:
 
     def ingest_sketch(self, sk: LpSketch) -> np.ndarray:
         """Index pre-sketched rows (must share this index's key + config)."""
-        n = sk.n
-        ids = np.arange(self.next_row_id, self.next_row_id + n, dtype=np.int64)
-        self.next_row_id += n
-        off = 0
-        while off < n:
-            take = min(n - off, self.active.remaining)
-            part = (sk if take == n and off == 0 else
-                    LpSketch(U=sk.U[off:off + take],
-                             moments=sk.moments[off:off + take]))
-            start_local = self.active.size
-            self.active.append(part, ids[off:off + take])
-            for j in range(take):
-                self._loc[int(ids[off + j])] = (-1, start_local + j)
-            off += take
-            if self.active.remaining == 0:
-                self.seal_active()
-        return ids
+        with self._lock:
+            n = sk.n
+            ids = np.arange(self.next_row_id, self.next_row_id + n,
+                            dtype=np.int64)
+            self.next_row_id += n
+            off = 0
+            while off < n:
+                take = min(n - off, self.active.remaining)
+                part = (sk if take == n and off == 0 else
+                        LpSketch(U=sk.U[off:off + take],
+                                 moments=sk.moments[off:off + take]))
+                start_local = self.active.size
+                self.active.append(part, ids[off:off + take])
+                for j in range(take):
+                    self._loc[int(ids[off + j])] = (-1, start_local + j)
+                off += take
+                if self.active.remaining == 0:
+                    self.seal_active()
+            return ids
 
     def seal_active(self) -> None:
         """Freeze the active segment and open a fresh one."""
-        if self.active.size == 0:
-            return
-        seg = self.active.seal()
-        seg_idx = len(self.sealed)
-        self.sealed.append(seg)
-        for local, rid in enumerate(seg.row_ids[:seg.n]):
-            if rid >= 0:
-                self._loc[int(rid)] = (seg_idx, local)
-        self.active = ActiveSegment(self.cfg, self.index_cfg.segment_capacity)
+        with self._lock:
+            if self.active.size == 0:
+                return
+            seg = self._place_segment(self.active.seal(),
+                                      self._shard_for_new_segment())
+            seg_idx = len(self.sealed)
+            self.sealed.append(seg)
+            for local, rid in enumerate(seg.row_ids[:seg.n]):
+                if rid >= 0:
+                    self._loc[int(rid)] = (seg_idx, local)
+            self.active = ActiveSegment(self.cfg, self.index_cfg.segment_capacity)
+
+    def _install_loaded_segment(self, seg: SealedSegment) -> None:
+        """Append a segment restored from storage, honoring placement."""
+        with self._lock:
+            self.sealed.append(
+                self._place_segment(seg, self._shard_for_new_segment()))
 
     # ----------------------------------------------------------------- delete
 
     def delete(self, row_ids) -> int:
         """Tombstone rows by id; returns how many were live before."""
-        removed = 0
-        for rid in np.atleast_1d(np.asarray(row_ids, np.int64)):
-            loc = self._loc.get(int(rid))
-            if loc is None:
-                continue
-            seg_idx, local = loc
-            seg = self.active if seg_idx == -1 else self.sealed[seg_idx]
-            if seg.live[local]:
-                seg.delete_local(local)
-                removed += 1
-        return removed
+        with self._lock:
+            removed = 0
+            for rid in np.atleast_1d(np.asarray(row_ids, np.int64)):
+                loc = self._loc.get(int(rid))
+                if loc is None:
+                    continue
+                seg_idx, local = loc
+                seg = self.active if seg_idx == -1 else self.sealed[seg_idx]
+                if seg.live[local]:
+                    seg.delete_local(local)
+                    removed += 1
+            return removed
+
+    # ------------------------------------------------------------- compaction
 
     def compact(self, min_live_frac: Optional[float] = None) -> int:
         """Rewrite sealed segments at/below the live-fraction threshold to
         live rows only (dropping fully-dead segments); returns how many
         segments were rewritten.  Query results are bit-for-bit unchanged —
-        compaction moves rows, never recomputes estimates."""
-        thr = self.index_cfg.min_live_frac if min_live_frac is None else min_live_frac
-        rewritten = 0
-        out: List[SealedSegment] = []
-        for seg in self.sealed:
-            if seg.live_fraction > thr:
-                out.append(seg)
-                continue
-            rewritten += 1
-            if seg.live_count == 0:
-                continue  # fully dead: drop the segment (_reindex forgets it)
-            out.append(seg.compacted())
-        self.sealed = out
-        self._reindex()
-        return rewritten
+        compaction moves rows, never recomputes estimates.
+
+        Blocking variant: builds and swaps inline.  ``compact_async`` runs
+        the same plan/build/swap off the query path."""
+        plan = self._compaction_plan(min_live_frac)
+        built = [(seg, snap, self._build_replacement(seg, snap))
+                 for seg, snap in plan]
+        return self._swap_compacted(built)
+
+    def compact_async(self, min_live_frac: Optional[float] = None
+                      ) -> CompactionHandle:
+        """Background compaction: replacement segments are built on a worker
+        thread from a tombstone snapshot, then swapped in atomically (one
+        generation flip under the index lock).  Ingest, delete, and query
+        proceed concurrently and never observe a half-compacted state;
+        deletes that land on a segment *while* its replacement is being
+        built are replayed onto the replacement at swap time.
+
+        One pass runs at a time: if a compaction is already in flight the
+        running pass's handle is returned and ``min_live_frac`` is NOT
+        re-applied — join it, then call again to compact at the new
+        threshold."""
+        with self._lock:
+            if self._compaction is not None and not self._compaction.done:
+                return self._compaction  # one pass at a time; join the running one
+            handle = CompactionHandle()
+            plan = self._compaction_plan(min_live_frac)
+
+            def work():
+                try:
+                    built = [(seg, snap, self._build_replacement(seg, snap))
+                             for seg, snap in plan]  # device work, no lock held
+                    handle._result = self._swap_compacted(built)
+                except BaseException as e:  # surfaced on join()
+                    handle._error = e
+                finally:
+                    handle._finished = True
+
+            handle._thread = threading.Thread(target=work, daemon=True,
+                                              name="sketch-index-compactor")
+            # publish + start under the lock: a racing compact_async either
+            # sees no handle or a started, not-finished one — never a handle
+            # whose thread can't be joined yet
+            self._compaction = handle
+            handle._thread.start()
+        return handle
+
+    def _build_replacement(self, seg: SealedSegment,
+                           snap: np.ndarray) -> Optional[SealedSegment]:
+        """Compacted replacement (placed on the original's shard), or None
+        to drop a segment that was fully dead at snapshot time.  Placement
+        happens here, at build time, so the swap holds the lock only for
+        pointer flips and tombstone-bitmap writes."""
+        if not snap.any():
+            return None
+        return self._place_segment(seg.compacted(live=snap), seg.shard)
+
+    def _compaction_plan(self, min_live_frac: Optional[float]):
+        """(segment, live-bitmap snapshot) for every segment due a rewrite."""
+        thr = (self.index_cfg.min_live_frac if min_live_frac is None
+               else min_live_frac)
+        with self._lock:
+            return [(seg, seg.live.copy()) for seg in self.sealed
+                    if seg.live_fraction <= thr]
+
+    def _swap_compacted(self, built) -> int:
+        """Atomically splice replacement segments into the sealed list.
+
+        Each entry is (original, live snapshot, replacement|None).  Under the
+        lock: originals that are no longer in the list (a racing compact beat
+        us) are skipped; tombstones set after the snapshot are replayed onto
+        the replacement; then the list is flipped in one assignment and the
+        generation bumped."""
+        with self._lock:
+            slot_of = {id(seg): i for i, seg in enumerate(self.sealed)}
+            out: List[Optional[SealedSegment]] = list(self.sealed)
+            rewritten = 0
+            for seg, snap, rep in built:
+                slot = slot_of.get(id(seg))
+                if slot is None:
+                    continue  # someone already rewrote/dropped this segment
+                rewritten += 1
+                if rep is None:
+                    out[slot] = None  # fully dead at snapshot: drop
+                    continue
+                newly_dead = seg.row_ids[snap & ~seg.live]
+                if len(newly_dead):
+                    rep.live[np.isin(rep.row_ids, newly_dead)] = False
+                    rep._mask_dev = None
+                out[slot] = rep
+            self.sealed = [s for s in out if s is not None]
+            self._reindex()
+            self.generation += 1
+            return rewritten
 
     def _reindex(self) -> None:
         self._loc = {}
@@ -205,6 +349,13 @@ class SketchIndex:
                         relative: bool = False, estimator: str = "plain"):
         """(query_rows, row_ids) of live rows with D < radius."""
         qsk = sketch(jnp.asarray(rows), self.key, self.cfg)
+        return self.query_threshold_sketch(qsk, radius=radius,
+                                           relative=relative,
+                                           estimator=estimator)
+
+    def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
+                               relative: bool = False,
+                               estimator: str = "plain"):
         return threshold_scan(qsk, self._segments(), self.cfg, radius=radius,
                               relative=relative, estimator=estimator,
                               engine=self.engine)

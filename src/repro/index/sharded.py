@@ -1,0 +1,281 @@
+"""``ShardedSketchIndex`` — sealed segments spread over a device mesh.
+
+The paper's setting is a matrix A too large for one machine; PR 2's
+``SketchIndex`` shrank A to O(nk) sketch state but still pinned every segment
+to a single host.  This layer places each sealed segment on a shard of a
+device mesh (round-robin over the mesh's data axis) and answers queries with
+the same two-stage reduce ``knn_sharded`` uses:
+
+  stage 1  every shard streams *its* segments through the engine's strip
+           machinery (plain packed-matmul or margin-MLE strips, tombstones
+           masked to +inf) and keeps a per-shard candidate list of width
+           min(top_k, shard rows) — only (q, k) candidates leave a shard,
+           never a distance strip;
+  stage 2  the per-shard lists are gathered and re-ranked by (value, global
+           position) — ``rerank_topk``'s lexsort — so equal distances
+           resolve to the earliest-ingested live row exactly as the
+           single-host fan (and the dense path) resolve them, even though
+           round-robin placement makes shard order differ from position
+           order.
+
+Values are never recomputed between stages, strips are tiled per segment
+exactly as the single-host fan tiles them, and the merge contract above pins
+ties: results are **bit-identical** to ``SketchIndex`` over the same live
+rows, which the conformance suite (tests/test_conformance.py) gates.
+
+The active (write-head) segment stays on the process-local default device —
+ingest latency never pays a cross-device hop — and joins the fan as one more
+candidate source.  Background compaction (``compact_async``) rebuilds a
+shard's segments on that same shard and swaps them in under the index
+generation flip; ``load`` re-spreads a stored index over whatever mesh the
+restoring process was launched with via per-segment ``device_put``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import mesh_shard_devices
+from repro.core.sketch import LpSketch, SketchConfig
+from repro.engine import EngineConfig
+from repro.engine.reduce import rerank_topk
+
+from .query import (
+    _IDX_SENTINEL,
+    _fold_segment_topk,
+    _merge_threshold_hits,
+    _pack_query,
+    _segment_rows,
+    _segment_threshold_hits,
+)
+from .segment import ActiveSegment, SealedSegment
+from .service import IndexConfig, SketchIndex
+
+__all__ = ["ShardedSketchIndex", "sharded_fan_topk", "sharded_threshold_scan"]
+
+Segment = Union[ActiveSegment, SealedSegment]
+
+
+def _query_on(dev, qsk: LpSketch, q_packed, estimator: str):
+    """Move the (tiny) query-side factors onto one shard's device."""
+    if dev is None:
+        return qsk, q_packed
+    if estimator == "plain":
+        Aq, nq = q_packed
+        return qsk, (jax.device_put(Aq, dev), jax.device_put(nq, dev))
+    qs = LpSketch(U=jax.device_put(qsk.U, dev),
+                  moments=jax.device_put(qsk.moments, dev))
+    return qs, q_packed
+
+
+def _group_by_shard(segments: Sequence[Segment], n_shards: int):
+    """[(shard device index | None, [(global base, segment), ...])] with the
+    active segment (shard None) last; bases follow global ingest order."""
+    groups: List[List[Tuple[int, Segment]]] = [[] for _ in range(n_shards)]
+    local: List[Tuple[int, Segment]] = []
+    base = 0
+    for seg in segments:
+        shard = getattr(seg, "shard", None)
+        if isinstance(seg, ActiveSegment) or shard is None:
+            local.append((base, seg))
+        else:
+            groups[shard].append((base, seg))
+        base += _segment_rows(seg)
+    out = [(s, grp) for s, grp in enumerate(groups) if grp]
+    if local:
+        out.append((None, local))
+    return out, base
+
+
+def _shard_candidates(qsk, q_packed, group, cfg, estimator, backend,
+                      col_block, top_k, q):
+    """Stage 1: one shard's candidate list in global-position space.
+
+    Runs the exact per-segment fold the single-host fan runs
+    (``_fold_segment_topk``), restricted to this shard's segments — the
+    per-segment candidates are identical by construction."""
+    shard_rows = sum(_segment_rows(seg) for _, seg in group)
+    k = min(top_k, shard_rows)
+    vals = jnp.full((q, k), jnp.inf, jnp.float32)
+    idx = jnp.full((q, k), _IDX_SENTINEL, jnp.int32)
+    for base, seg in group:
+        vals, idx = _fold_segment_topk(vals, idx, qsk, q_packed, seg, cfg,
+                                       estimator, backend, col_block, base, k)
+    return vals, idx
+
+
+def sharded_fan_topk(
+    qsk: LpSketch,
+    segments: Sequence[Segment],
+    cfg: SketchConfig,
+    devices: Sequence,
+    *,
+    top_k: int,
+    estimator: str = "plain",
+    engine: Optional[EngineConfig] = None,
+) -> Tuple[jax.Array, np.ndarray]:
+    """Two-stage top-k fan over device-placed segments.
+
+    Bit-identical (values and tie-broken ids) to ``fan_topk`` over the same
+    segments: stage 1 keeps raw strip values, stage 2's (value, position)
+    lexsort reproduces the dense tie-break regardless of placement."""
+    if estimator not in ("plain", "mle"):
+        raise ValueError(f"unknown estimator {estimator!r}")
+    backend, _, col_block = (engine or EngineConfig()).resolve()
+    q = qsk.n
+    n_live = sum(seg.live_count for seg in segments)
+    k_out = min(top_k, n_live)
+    if k_out == 0:
+        return (jnp.zeros((q, 0), jnp.float32), np.zeros((q, 0), np.int64))
+
+    groups, total = _group_by_shard(segments, len(devices))
+    q_packed = _pack_query(qsk, cfg, estimator)
+
+    # dispatch every shard's stage-1 work before gathering any of it: jax
+    # dispatch is async, so the shards compute concurrently and stage-1
+    # wall-clock is the slowest shard, not the sum
+    pending = []
+    for shard, group in groups:
+        dev = devices[shard] if shard is not None else None
+        qs, qp = _query_on(dev, qsk, q_packed, estimator)
+        pending.append(_shard_candidates(qs, qp, group, cfg, estimator,
+                                         backend, col_block, top_k, q))
+
+    # only the (q, k) candidate lists cross the shard boundary
+    all_vals = [np.asarray(jax.device_get(v)) for v, _ in pending]
+    all_idx = [np.asarray(jax.device_get(i)) for _, i in pending]
+    vals, idx = rerank_topk(np.concatenate(all_vals, axis=1),
+                            np.concatenate(all_idx, axis=1), k_out)
+
+    pos_to_id = np.concatenate([seg.row_ids[:_segment_rows(seg)]
+                                for seg in segments])
+    return vals, pos_to_id[np.asarray(idx)]
+
+
+def sharded_threshold_scan(
+    qsk: LpSketch,
+    segments: Sequence[Segment],
+    cfg: SketchConfig,
+    devices: Sequence,
+    *,
+    radius: float,
+    relative: bool = False,
+    estimator: str = "plain",
+    engine: Optional[EngineConfig] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(query_rows, row_ids) with D < radius over device-placed segments.
+
+    Per-shard strips leave only hit pairs; the final (query, id) lexsort is
+    the same order ``threshold_scan`` (and the engine's row-major dense
+    contract) produces, so results are pair-for-pair identical."""
+    backend, _, col_block = (engine or EngineConfig()).resolve()
+    groups, _ = _group_by_shard(segments, len(devices))
+    q_packed = _pack_query(qsk, cfg, estimator)
+    nq_h = np.asarray(qsk.norm_pp(cfg.p))
+
+    rows_out, ids_out = [], []
+    for shard, group in groups:
+        dev = devices[shard] if shard is not None else None
+        qs, qp = _query_on(dev, qsk, q_packed, estimator)
+        for _base, seg in group:
+            rr, ii = _segment_threshold_hits(qs, qp, seg, cfg, estimator,
+                                             backend, col_block, nq_h,
+                                             radius, relative)
+            rows_out.extend(rr)
+            ids_out.extend(ii)
+    return _merge_threshold_hits(rows_out, ids_out)
+
+
+class ShardedSketchIndex(SketchIndex):
+    """A ``SketchIndex`` whose sealed segments live across a device mesh.
+
+    Construction takes either a ``mesh`` (the shard list is the mesh's data
+    axis, via ``mesh_shard_devices``) or an explicit ``devices`` list.  The
+    full lifecycle — ingest, delete, compact/compact_async, save, load — is
+    inherited; placement rides on the base class's ``_place_segment`` hook,
+    so sealing, background-compaction swaps, and reload all land segments on
+    their shard without special cases.
+    """
+
+    def __init__(self, cfg: SketchConfig, *, seed: int = 0,
+                 index_cfg: Optional[IndexConfig] = None,
+                 engine: Optional[EngineConfig] = None,
+                 mesh=None, devices: Optional[Sequence] = None,
+                 data_axes="data"):
+        if devices is None:
+            devices = (mesh_shard_devices(mesh, data_axes)
+                       if mesh is not None else jax.devices())
+        self.devices = list(devices)
+        if not self.devices:
+            raise ValueError("sharded index needs at least one device")
+        super().__init__(cfg, seed=seed, index_cfg=index_cfg, engine=engine)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.devices)
+
+    def stats(self) -> dict:
+        s = super().stats()
+        per_shard = [0] * self.n_shards
+        for seg in self.sealed:
+            if seg.shard is not None:
+                per_shard[seg.shard] += 1
+        s["shards"] = self.n_shards
+        s["segments_per_shard"] = per_shard
+        return s
+
+    # ------------------------------------------------------------- placement
+
+    def _shard_for_new_segment(self) -> int:
+        return len(self.sealed) % self.n_shards
+
+    def _place_segment(self, seg: SealedSegment,
+                       shard: Optional[int] = None) -> SealedSegment:
+        """Pin a segment's device buffers to its shard.
+
+        ``device_put`` moves bits, never recomputes them, so placement keeps
+        the bit-for-bit query contract.  Cached packed factors / masks are
+        dropped — they rebuild lazily on the target device."""
+        shard = (shard if shard is not None else 0) % self.n_shards
+        dev = self.devices[shard]
+        seg.sketch = LpSketch(U=jax.device_put(seg.sketch.U, dev),
+                              moments=jax.device_put(seg.sketch.moments, dev))
+        seg._packed = None
+        seg._mask_dev = None
+        seg.shard = shard
+        return seg
+
+    # ---------------------------------------------------------------- query
+
+    def query_sketch(self, qsk: LpSketch, top_k: int = 10,
+                     estimator: str = "plain"):
+        return sharded_fan_topk(qsk, self._segments(), self.cfg, self.devices,
+                                top_k=top_k, estimator=estimator,
+                                engine=self.engine)
+
+    def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
+                               relative: bool = False,
+                               estimator: str = "plain"):
+        return sharded_threshold_scan(
+            qsk, self._segments(), self.cfg, self.devices, radius=radius,
+            relative=relative, estimator=estimator, engine=self.engine)
+
+    # ----------------------------------------------------------- persistence
+
+    @classmethod
+    def load(cls, path: str, *, engine: Optional[EngineConfig] = None,
+             mesh=None, devices: Optional[Sequence] = None,
+             data_axes="data") -> "ShardedSketchIndex":
+        """Restore with sharding hints: each stored segment is ``device_put``
+        onto its shard as it loads (multi-host restore path)."""
+        from .store import load_index
+        if mesh is None and devices is None:
+            devices = jax.devices()
+        index = load_index(path, engine=engine, mesh=mesh, devices=devices,
+                           data_axes=data_axes)
+        assert isinstance(index, cls)
+        return index

@@ -74,14 +74,21 @@ def save_index(path: str, index: SketchIndex) -> str:
     """Atomically persist ``index`` at ``path`` (replacing any prior save)."""
     segments = []
     arrays = []
-    for seg in index.sealed:
-        segments.append({"n": seg.n})
-        arrays.append((seg.sketch.U, seg.sketch.moments, seg.live, seg.row_ids))
-    act = index.active
-    if act.size:
-        n = act.size
-        segments.append({"n": n})
-        arrays.append((act.U[:n], act.moments[:n], act.live[:n], act.row_ids[:n]))
+    # snapshot under the index lock so a concurrent background-compaction
+    # swap can't tear the segment list mid-walk (live bitmaps are copied for
+    # the same reason: deletes may land while the .npy files stream out)
+    with index._lock:
+        for seg in index.sealed:
+            segments.append({"n": seg.n})
+            arrays.append((seg.sketch.U, seg.sketch.moments,
+                           seg.live.copy(), seg.row_ids))
+        act = index.active
+        if act.size:
+            n = act.size
+            segments.append({"n": n})
+            arrays.append((act.U[:n], act.moments[:n],
+                           act.live[:n].copy(), act.row_ids[:n]))
+        next_row_id = index.next_row_id
 
     manifest = {
         "format_version": _FORMAT_VERSION,
@@ -91,7 +98,7 @@ def save_index(path: str, index: SketchIndex) -> str:
             "min_live_frac": index.index_cfg.min_live_frac,
         },
         "seed": index.seed,
-        "next_row_id": index.next_row_id,
+        "next_row_id": next_row_id,
         "segments": segments,
     }
     with atomic_replace_dir(path) as tmp:
@@ -111,9 +118,15 @@ def save_index(path: str, index: SketchIndex) -> str:
     return path
 
 
-def load_index(path: str, *, engine: Optional[EngineConfig] = None
-               ) -> SketchIndex:
-    """Restore an index saved by ``save_index`` onto the current devices."""
+def load_index(path: str, *, engine: Optional[EngineConfig] = None,
+               mesh=None, devices=None, data_axes="data") -> SketchIndex:
+    """Restore an index saved by ``save_index`` onto the current devices.
+
+    With ``mesh`` (or an explicit ``devices`` list) the restore comes back as
+    a :class:`~repro.index.sharded.ShardedSketchIndex`: each stored segment
+    is ``device_put`` onto its assigned shard as it loads — the multi-host
+    restore path, where a fresh process re-spreads the corpus over whatever
+    mesh it was launched with."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     if manifest["format_version"] != _FORMAT_VERSION:
@@ -121,8 +134,14 @@ def load_index(path: str, *, engine: Optional[EngineConfig] = None
             f"unsupported index format {manifest['format_version']}")
     cfg = _cfg_from_json(manifest["sketch_config"])
     icfg = IndexConfig(**manifest["index_config"])
-    index = SketchIndex(cfg, seed=manifest["seed"], index_cfg=icfg,
-                        engine=engine)
+    if mesh is not None or devices is not None:
+        from .sharded import ShardedSketchIndex  # local import: sharded imports store
+        index: SketchIndex = ShardedSketchIndex(
+            cfg, seed=manifest["seed"], index_cfg=icfg, engine=engine,
+            mesh=mesh, devices=devices, data_axes=data_axes)
+    else:
+        index = SketchIndex(cfg, seed=manifest["seed"], index_cfg=icfg,
+                            engine=engine)
     index.next_row_id = manifest["next_row_id"]
     for i, meta in enumerate(manifest["segments"]):
         U = np.load(os.path.join(path, f"seg_{i:05d}.U.npy"))
@@ -142,6 +161,6 @@ def load_index(path: str, *, engine: Optional[EngineConfig] = None
             sk = _pad_rows(sk, n_pad)
             ids = np.concatenate([ids, np.full(n_pad, -1, np.int64)])
             live = np.concatenate([live, np.zeros(n_pad, bool)])
-        index.sealed.append(SealedSegment(sk, ids, live))
+        index._install_loaded_segment(SealedSegment(sk, ids, live))
     index._reindex()
     return index

@@ -9,13 +9,24 @@ from repro.compat import make_mesh
 from repro.configs.base import TrainKnobs
 from repro.parallel.sharding import Parallel, ShardingRules
 
-__all__ = ["make_production_mesh", "make_parallel"]
+__all__ = ["make_production_mesh", "make_serving_mesh", "make_parallel"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes)
+
+
+def make_serving_mesh(n_shards: int | None = None):
+    """The index-serving mesh: 1 x N over ("replica", "data").
+
+    The sharded sketch index spreads sealed segments over the ``data`` axis;
+    the width-1 ``replica`` axis keeps the mesh shape compatible with the
+    two-axis sharding rules everywhere else.  Defaults to every local
+    device."""
+    n = n_shards or len(jax.devices())
+    return make_mesh((1, n), ("replica", "data"))
 
 
 def make_parallel(mesh=None, *, knobs: TrainKnobs = TrainKnobs(),

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import LpSketch, SketchConfig
-from repro.index import IndexConfig, SketchIndex
+from repro.index import IndexConfig, ShardedSketchIndex, SketchIndex
 
 __all__ = ["generate", "SketchKnnService"]
 
@@ -49,16 +49,25 @@ class SketchKnnService:
     index's preallocated active segment (O(batch), no concat, compile-once)
     and queries fan the engine's fused top-k across segments; the shim keeps
     the original call surface and adds delete / persistence passthroughs.
+    With ``mesh`` (or ``devices``) the backing index is a
+    ``ShardedSketchIndex`` — sealed segments spread over the mesh's data
+    axis, same answers bit for bit.
     """
 
     cfg: SketchConfig
     seed: int = 0
     segment_capacity: int = 4096
+    mesh: Optional[object] = None
+    devices: Optional[object] = None
 
     def __post_init__(self):
-        self.index = SketchIndex(
-            self.cfg, seed=self.seed,
-            index_cfg=IndexConfig(segment_capacity=self.segment_capacity))
+        icfg = IndexConfig(segment_capacity=self.segment_capacity)
+        if self.mesh is not None or self.devices is not None:
+            self.index: SketchIndex = ShardedSketchIndex(
+                self.cfg, seed=self.seed, index_cfg=icfg,
+                mesh=self.mesh, devices=self.devices)
+        else:
+            self.index = SketchIndex(self.cfg, seed=self.seed, index_cfg=icfg)
         self.key = self.index.key
 
     @property
@@ -89,12 +98,18 @@ class SketchKnnService:
         return self.index.save(path)
 
     @classmethod
-    def load(cls, path: str) -> "SketchKnnService":
-        index = SketchIndex.load(path)
+    def load(cls, path: str, *, mesh=None, devices=None) -> "SketchKnnService":
+        if mesh is not None or devices is not None:
+            index: SketchIndex = ShardedSketchIndex.load(
+                path, mesh=mesh, devices=devices)
+        else:
+            index = SketchIndex.load(path)
         svc = cls.__new__(cls)
         svc.cfg = index.cfg
         svc.seed = index.seed
         svc.segment_capacity = index.index_cfg.segment_capacity
+        svc.mesh = mesh
+        svc.devices = devices
         svc.index = index
         svc.key = index.key
         return svc

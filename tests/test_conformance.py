@@ -1,0 +1,322 @@
+"""Cross-backend conformance suite — THE gate for the engine and both index
+serving tiers.
+
+Part 1 pins the engine: one parameterized matrix over
+``backend x reduce x estimator x shape`` asserting parity with the dense
+reference (``pairwise_distances`` / ``pairwise_margin_mle`` + numpy
+reductions).  ``xla`` strips (and the backend-independent margin-MLE strips)
+must match bit for bit, values AND tie-broken indices; ``interpret`` runs the
+actual Pallas kernel program and must agree to fp tolerance with ids intact.
+Shapes cover even, odd/ragged, and padded regimes (data smaller than one
+strip, so blocking degenerates to a single padded strip).
+
+Part 2 is strip invariance as a property: results are independent of
+``row_block``/``col_block`` choices, including blocks larger than the data
+(driven through hypothesis, or its deterministic fallback shim).
+
+Part 3 pins the sharded index: ``ShardedSketchIndex`` on a 1xN CPU mesh must
+return bit-identical top-k/threshold results to the single-host
+``SketchIndex`` over the same live rows through an interleaved
+ingest / delete / background-compact / save / load sequence — in-process on
+the 1x1 mesh, and on a real 4-device mesh in a subprocess (forced host
+devices, per the launch-only device-count rule).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # bare env: deterministic fallback (CI has the real one)
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from repro import engine
+from repro.core import (
+    SketchConfig,
+    pairwise_distances,
+    pairwise_margin_mle,
+    sketch,
+)
+from repro.engine import EngineConfig
+from repro.index import IndexConfig, ShardedSketchIndex, SketchIndex
+from repro.launch.mesh import make_serving_mesh
+
+KEY = jax.random.key(11)
+
+# (label, n, m): even blocks, odd/ragged tails, and data smaller than one
+# strip (the padded regime — blocking must degenerate gracefully)
+SHAPES = [("even", 64, 32), ("odd", 37, 21), ("padded", 7, 5)]
+BLOCKS = EngineConfig(backend="xla", row_block=16, col_block=16)
+
+
+def _sketches(n, m, estimator, d=96, k=48):
+    strategy = "alternative" if estimator == "mle" else "basic"
+    cfg = SketchConfig(p=4, k=k, strategy=strategy, block_d=64)
+    X = jax.random.uniform(jax.random.key(1), (n, d))
+    Y = jax.random.uniform(jax.random.key(2), (m, d))
+    return sketch(X, KEY, cfg), sketch(Y, KEY, cfg), cfg
+
+
+def _dense(sa, sb, cfg, estimator):
+    if estimator == "mle":
+        return np.asarray(pairwise_margin_mle(sa, sb, cfg))
+    return np.asarray(pairwise_distances(sa, sb, cfg))
+
+
+def _gapped_radius(dense):
+    """A threshold with a wide moat: no dense value within 1e-3 relative of
+    it, so fp-tolerant backends can't flip a hit across the boundary."""
+    flat = np.unique(np.sort(dense, axis=None))
+    gaps = np.diff(flat)
+    mid = len(flat) // 2
+    order = np.argsort(-gaps[mid // 2: mid + mid // 2]) + mid // 2
+    i = order[0]
+    return float((flat[i] + flat[i + 1]) / 2)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=[s[0] for s in SHAPES])
+@pytest.mark.parametrize("estimator", ["plain", "mle"])
+@pytest.mark.parametrize("reduce", ["topk", "threshold", "full"])
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_engine_conformance(backend, reduce, estimator, shape):
+    _, n, m = shape
+    sa, sb, cfg = _sketches(n, m, estimator)
+    dense = _dense(sa, sb, cfg, estimator)
+    eng = EngineConfig(backend=backend, row_block=16, col_block=16)
+    # margin-MLE strips never route the strip backend, so they stay exact;
+    # xla strips are bit-identical to dense by the engine's CPU contract
+    exact = backend == "xla" or estimator == "mle"
+
+    if reduce == "full":
+        got = engine.pairwise(sa, sb, cfg, reduce="full",
+                              estimator=estimator, engine=eng)
+        if exact:
+            np.testing.assert_array_equal(got, dense)
+        else:
+            np.testing.assert_allclose(got, dense, rtol=1e-5, atol=1e-5)
+    elif reduce == "topk":
+        k = min(9, m)
+        neg, idx = jax.lax.top_k(-jnp.asarray(dense), k)
+        vals, gidx = engine.pairwise(sa, sb, cfg, reduce="topk", top_k=9,
+                                     estimator=estimator, engine=eng)
+        if exact:
+            np.testing.assert_array_equal(np.asarray(vals), np.asarray(-neg))
+        else:
+            np.testing.assert_allclose(np.asarray(vals), np.asarray(-neg),
+                                       rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(gidx), np.asarray(idx))
+    else:
+        radius = _gapped_radius(dense)
+        rows, cols = engine.pairwise(sa, sb, cfg, reduce="threshold",
+                                     radius=radius, estimator=estimator,
+                                     engine=eng)
+        want_r, want_c = np.nonzero(dense < radius)
+        np.testing.assert_array_equal(rows, want_r)
+        np.testing.assert_array_equal(cols, want_c)
+
+
+# --------------------------------------------------------------------------
+# Part 2: strip invariance — block sizes are an implementation detail
+# --------------------------------------------------------------------------
+
+_N, _M = 37, 29
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=64),
+       st.integers(min_value=2, max_value=64),
+       st.sampled_from(["topk", "threshold", "full"]))
+def test_plain_results_independent_of_blocks(row_block, col_block, reduce):
+    """Plain-estimator results are bitwise independent of the strip tiling,
+    including blocks larger than the data (a single padded strip)."""
+    sa, sb, cfg = _sketches(_N, _M, "plain")
+    dense = _dense(sa, sb, cfg, "plain")
+    eng = EngineConfig(backend="xla", row_block=row_block, col_block=col_block)
+    if reduce == "full":
+        got = engine.pairwise(sa, sb, cfg, reduce="full", engine=eng)
+        np.testing.assert_array_equal(got, dense)
+    elif reduce == "topk":
+        neg, idx = jax.lax.top_k(-jnp.asarray(dense), 7)
+        vals, gidx = engine.pairwise(sa, sb, cfg, reduce="topk", top_k=7,
+                                     engine=eng)
+        np.testing.assert_array_equal(np.asarray(vals), np.asarray(-neg))
+        np.testing.assert_array_equal(np.asarray(gidx), np.asarray(idx))
+    else:
+        radius = float(np.median(dense))
+        rows, cols = engine.pairwise(sa, sb, cfg, reduce="threshold",
+                                     radius=radius, engine=eng)
+        want_r, want_c = np.nonzero(dense < radius)
+        np.testing.assert_array_equal(rows, want_r)
+        np.testing.assert_array_equal(cols, want_c)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=2, max_value=64),
+       st.integers(min_value=2, max_value=64))
+def test_mle_results_independent_of_blocks(row_block, col_block):
+    """Margin-MLE strips re-run Newton per strip, so different tilings may
+    differ by fp noise — but only fp noise, never by a candidate swap at
+    separated distances."""
+    sa, sb, cfg = _sketches(_N, _M, "mle")
+    dense = _dense(sa, sb, cfg, "mle")
+    eng = EngineConfig(backend="xla", row_block=row_block, col_block=col_block)
+    got = engine.pairwise(sa, sb, cfg, reduce="full", estimator="mle",
+                          engine=eng)
+    np.testing.assert_allclose(got, dense, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Part 3: the sharded index against the single-host index, bit for bit
+# --------------------------------------------------------------------------
+
+CFG = SketchConfig(p=4, k=32, block_d=64)
+D = 256
+
+
+def _interleaved_lifecycle(make_sharded, tmp_path):
+    """Run the acceptance sequence on a (single-host, sharded) index pair,
+    asserting bit-identical answers after every step.  ``make_sharded``
+    builds the sharded half (so the multi-device subprocess reuses this)."""
+    rng = np.random.default_rng(3)
+    X = rng.uniform(0, 1, (420, D)).astype(np.float32)
+    Q = rng.uniform(0, 1, (6, D)).astype(np.float32)
+    icfg = IndexConfig(segment_capacity=64)
+    ref = SketchIndex(CFG, seed=7, index_cfg=icfg)
+    sh = make_sharded(CFG, icfg)
+
+    def check(tag, top_k=11):
+        d0, i0 = ref.query(jnp.asarray(Q), top_k=top_k)
+        d1, i1 = sh.query(jnp.asarray(Q), top_k=top_k)
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1), err_msg=tag)
+        np.testing.assert_array_equal(i0, i1, err_msg=tag)
+        r0, c0 = ref.query_threshold(jnp.asarray(Q), radius=0.12, relative=True)
+        r1, c1 = sh.query_threshold(jnp.asarray(Q), radius=0.12, relative=True)
+        np.testing.assert_array_equal(r0, r1, err_msg=tag)
+        np.testing.assert_array_equal(c0, c1, err_msg=tag)
+
+    ids_r = ref.ingest(jnp.asarray(X[:300]))
+    ids_s = sh.ingest(jnp.asarray(X[:300]))
+    np.testing.assert_array_equal(ids_r, ids_s)
+    check("after ingest")
+
+    ref.delete(ids_r[40:160])
+    sh.delete(ids_s[40:160])
+    check("after delete")
+
+    # background compaction: replacements build off the query path, the
+    # swap is one atomic generation flip; ingest + delete land mid-flight
+    h = sh.compact_async(min_live_frac=0.75)
+    ref.compact(min_live_frac=0.75)
+    more_r = ref.ingest(jnp.asarray(X[300:]))
+    more_s = sh.ingest(jnp.asarray(X[300:]))
+    np.testing.assert_array_equal(more_r, more_s)
+    assert h.join() > 0
+    assert sh.generation >= 1
+    check("after background compact + concurrent ingest")
+
+    ref.delete(more_r[:25])
+    sh.delete(more_s[:25])
+    check("after post-compact delete")
+
+    path = os.path.join(str(tmp_path), "sharded_idx")
+    sh.save(path)
+    sh2 = type(sh).load(path, devices=sh.devices)
+    d0, i0 = ref.query(jnp.asarray(Q), top_k=11)
+    d1, i1 = sh2.query(jnp.asarray(Q), top_k=11)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(i0, i1)
+
+    # the restored index keeps serving and stays conformant
+    tail_r = ref.ingest(jnp.asarray(X[:40]))
+    tail_s = sh2.ingest(jnp.asarray(X[:40]))
+    np.testing.assert_array_equal(tail_r, tail_s)
+    d2, i2 = ref.query(jnp.asarray(Q), top_k=11, estimator="mle")
+    d3, i3 = sh2.query(jnp.asarray(Q), top_k=11, estimator="mle")
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d3))
+    np.testing.assert_array_equal(i2, i3)
+
+
+def test_sharded_lifecycle_matches_single_host(tmp_path):
+    """The acceptance property, in process, on the 1x1 serving mesh."""
+    mesh = make_serving_mesh(1)
+
+    def make(cfg, icfg):
+        return ShardedSketchIndex(cfg, seed=7, index_cfg=icfg, mesh=mesh)
+
+    _interleaved_lifecycle(make, tmp_path)
+
+
+def test_sharded_query_excludes_tombstones_any_topk():
+    """Dead rows never surface from any shard even at top_k > live count."""
+    rng = np.random.default_rng(5)
+    X = rng.uniform(0, 1, (150, D)).astype(np.float32)
+    sh = ShardedSketchIndex(CFG, seed=1,
+                            index_cfg=IndexConfig(segment_capacity=32))
+    ids = sh.ingest(jnp.asarray(X))
+    sh.delete(ids[10:120])
+    d, got = sh.query(jnp.asarray(X[:3]), top_k=150)
+    assert got.shape[1] == sh.n_live
+    assert not np.isin(got, ids[10:120]).any()
+    assert np.isfinite(np.asarray(d)).all()
+
+
+def test_sharded_stats_and_placement_round_robin():
+    sh = ShardedSketchIndex(CFG, seed=1,
+                            index_cfg=IndexConfig(segment_capacity=32),
+                            devices=jax.devices() * 3)  # fake 3 shards on CPU
+    rng = np.random.default_rng(6)
+    sh.ingest(jnp.asarray(rng.uniform(0, 1, (200, D)).astype(np.float32)))
+    s = sh.stats()
+    assert s["shards"] == 3
+    assert sum(s["segments_per_shard"]) == s["sealed_segments"] == 6
+    # round-robin: no shard holds more than ceil(total/shards)
+    assert max(s["segments_per_shard"]) == 2
+    assert [seg.shard for seg in sh.sealed] == [0, 1, 2, 0, 1, 2]
+
+
+_MULTIDEV_CHILD = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import tempfile
+    import test_conformance as tc
+    from repro.index import ShardedSketchIndex
+    from repro.launch.mesh import make_serving_mesh
+
+    mesh = make_serving_mesh(4)
+    assert mesh.shape["data"] == 4
+
+    def make(cfg, icfg):
+        return ShardedSketchIndex(cfg, seed=7, index_cfg=icfg, mesh=mesh)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        tc._interleaved_lifecycle(make, tmp)
+    print("SHARDED_4DEV_OK")
+    """
+)
+
+
+def test_sharded_lifecycle_multidevice_subprocess():
+    """The same acceptance sequence on a real 1x4 CPU mesh (forced host
+    devices live in a child process, per the launch-only device-count
+    rule)."""
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), os.path.join(root, "tests"),
+         env.get("PYTHONPATH", "")])
+    res = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_CHILD], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "SHARDED_4DEV_OK" in res.stdout

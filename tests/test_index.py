@@ -300,6 +300,89 @@ def test_one_row_save_load_bit_for_bit(rng, tmp_path):
     np.testing.assert_array_equal(i0, i1)
 
 
+def test_micro_batcher_empty_batch_returns_early(rng):
+    """A 0-row query batch answers immediately with empty shapes — it must
+    not join a batch or push a degenerate 0-row strip through the engine."""
+    X = np.asarray(rows_of(rng, 40))
+    index = make_index(capacity=40)
+    index.ingest(jnp.asarray(X))
+    mb = MicroBatcher(index, max_batch=8, max_wait_ms=60_000.0)
+    d, ids = mb.query(np.zeros((0, D), np.float32), top_k=5)
+    assert d.shape == (0, 5) and ids.shape == (0, 5)
+    assert ids.dtype == np.int64
+    assert mb.batches_run == 0 and mb.rows_served == 0
+    assert not mb._groups  # nothing enqueued, nothing left hanging
+    # k still caps at the live count, mirroring index.query
+    index.delete(index.query(jnp.asarray(X[:1]), top_k=40)[1][0, 3:])
+    d, ids = mb.query(np.zeros((0, D), np.float32), top_k=5)
+    assert d.shape == (0, 3) and ids.shape == (0, 3)
+
+
+def test_background_compaction_replays_concurrent_deletes(rng):
+    """Deletes that land while replacement segments are being built must be
+    replayed at swap time: the driver walks the plan/build/swap steps by
+    hand with a delete injected between snapshot and swap."""
+    X = np.asarray(rows_of(rng, 200))
+    Q = np.asarray(rows_of(rng, 4))
+    index = make_index(capacity=50)
+    ids = index.ingest(jnp.asarray(X))
+    index.delete(ids[:30])  # segment 0 at 20/50 live: due for compaction
+
+    plan = index._compaction_plan(0.5)
+    assert len(plan) == 1
+    seg, snap = plan[0]
+    built = [(seg, snap, seg.compacted(live=snap))]
+    # a delete lands after the snapshot, touching rows the replacement kept
+    index.delete(ids[30:40])
+    gen0 = index.generation
+    assert index._swap_compacted(built) == 1
+    assert index.generation == gen0 + 1
+
+    live = np.ones(200, bool)
+    live[:40] = False
+    assert index.n_live == live.sum()
+    assert_matches_dense(index, X, live, Q)
+    _, got = index.query(jnp.asarray(Q), top_k=60)
+    assert not np.isin(got, ids[:40]).any()
+
+
+def test_compact_async_matches_blocking_compact(rng):
+    """compact_async == compact: same rewrite count, bit-identical queries,
+    one generation flip, and the handle is reusable/joinable twice."""
+    X = np.asarray(rows_of(rng, 300))
+    Q = np.asarray(rows_of(rng, 5))
+    a, b = make_index(capacity=64), make_index(capacity=64)
+    ids_a, ids_b = a.ingest(jnp.asarray(X)), b.ingest(jnp.asarray(X))
+    a.delete(ids_a[10:100]); b.delete(ids_b[10:100])
+    n_sync = a.compact(min_live_frac=0.6)
+    h = b.compact_async(min_live_frac=0.6)
+    assert h.join() == n_sync > 0
+    assert h.join() == n_sync  # idempotent join
+    assert h.done and b.stats()["compacting"] is False
+    da, ia = a.query(jnp.asarray(Q), top_k=9)
+    db, ib = b.query(jnp.asarray(Q), top_k=9)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+    np.testing.assert_array_equal(ia, ib)
+
+
+def test_compaction_swap_skips_already_rewritten_segments(rng):
+    """A stale build (its original already swapped out by a racing compact)
+    must be skipped, not spliced over the newer segment list."""
+    X = np.asarray(rows_of(rng, 100))
+    index = make_index(capacity=50)
+    ids = index.ingest(jnp.asarray(X))
+    index.delete(ids[:30])
+    plan = index._compaction_plan(0.5)
+    built = [(seg, snap, seg.compacted(live=snap)) for seg, snap in plan]
+    assert index.compact(min_live_frac=0.5) == 1  # the racing winner
+    gen = index.generation
+    assert index._swap_compacted(built) == 0  # stale: nothing to do
+    assert index.generation == gen + 1  # flip still recorded
+    live = np.ones(100, bool)
+    live[:30] = False
+    assert_matches_dense(index, X, live, np.asarray(rows_of(rng, 3)))
+
+
 def test_micro_batcher_flush_survives_errors(rng):
     X = np.asarray(rows_of(rng, 50))
     index = make_index(capacity=50)

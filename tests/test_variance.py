@@ -136,3 +136,43 @@ def test_opposite_signs_flip_delta4():
     x = -np.abs(_pair(50)[0]) - 0.1
     y = np.abs(_pair(52)[0]) + 0.1
     assert float(delta_basic_vs_alternative(x, y, 4, 64)) >= 0.0
+
+
+@pytest.mark.slow
+def test_mle_empirical_variance_tracks_lemma4_bound():
+    """Seeded Monte-Carlo gate on the shipped margin-MLE estimator: its
+    empirical variance over independent sketch draws must track the Lemma-4
+    asymptotic bound (the calibrated ratio is ~0.98 at k=128), and its mean
+    must sit on the true distance.  An estimator regression — a broken
+    Newton epilogue, a mis-packed term, a silently degraded root — shows up
+    as a loud ratio/bias violation here instead of a quiet accuracy drift."""
+    import jax.numpy as jnp
+
+    from repro.core import SketchConfig, pairwise_margin_mle, sketch
+    from repro.core.decomposition import exact_lp_distance
+    from repro.core.sketch import LpSketch
+    from repro.core.variance import variance_margin_mle
+
+    k, n_seeds = 128, 400
+    cfg = SketchConfig(p=4, k=k, strategy="alternative", block_d=64)
+    x, y = _pair(60)  # fixed non-negative pair (Lemma 4's regime)
+    X = jnp.asarray(np.stack([x, y]))
+
+    ests = np.empty(n_seeds)
+    for seed in range(n_seeds):
+        sk = sketch(X, jax.random.key(seed), cfg)
+        sa = LpSketch(U=sk.U[:1], moments=sk.moments[:1])
+        sb = LpSketch(U=sk.U[1:], moments=sk.moments[1:])
+        ests[seed] = float(pairwise_margin_mle(sa, sb, cfg, clip=False)[0, 0])
+
+    bound = float(variance_margin_mle(jnp.asarray(x), jnp.asarray(y), 4, k))
+    ratio = ests.var(ddof=1) / bound
+    # chi^2-ish spread of a 400-sample variance is ~+-20%; the margin below
+    # catches real regressions (2x variance blowups) without seed lottery
+    assert 0.5 <= ratio <= 1.6, f"empirical/Lemma-4 variance ratio {ratio:.3f}"
+
+    true_d = float(exact_lp_distance(jnp.asarray(x), jnp.asarray(y), 4))
+    se_mean = np.sqrt(bound / n_seeds)
+    assert abs(ests.mean() - true_d) <= 4 * se_mean, (
+        f"margin-MLE mean {ests.mean():.4f} vs true {true_d:.4f} "
+        f"(4*se={4 * se_mean:.4f})")
