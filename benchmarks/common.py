@@ -44,7 +44,17 @@ def mc_estimates(x, y, cfg: SketchConfig, n_mc: int, seed0: int = 0, mle=False):
     return np.asarray(_mc_batch(x, y, seeds, cfg, n_mc, mle))
 
 
+# every emitted row, across all modules a driver run imports — the baseline
+# regression check (benchmarks/run.py --check-baseline) reads this instead of
+# re-parsing stdout.  QUIET suppresses the CSV print (the check's warm second
+# pass measures without polluting the artifact).
+ALL_ROWS: list = []
+QUIET = False
+
+
 def emit(rows):
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    ALL_ROWS.extend(rows)
+    if not QUIET:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
     return rows

@@ -8,6 +8,12 @@ Emits the harness CSV rows (name,us_per_call,derived):
   index_query_sharded us per sharded query call    derived = p50_ms|shards
                       (with --mesh / REPRO_BENCH_MESH=1: segments spread over
                       a 1xN serving mesh, two-stage fan)
+  stage1_parallel     us per pre-sketched sharded query through the
+                      shard_map stage-1 fan, derived =
+                      p50_ms|dispatch_ms|shards — dispatch_ms is the same
+                      pre-sketched query through the sequential-dispatch
+                      stage 1, so the row doubles as the parallel-fan
+                      speedup readout (gated by the CI baseline check)
 
 REPRO_BENCH_TINY=1 shrinks shapes for the CI smoke job.
 """
@@ -89,18 +95,50 @@ def run():
         )
         for lo in range(0, n, batch):
             sharded.ingest(jnp.asarray(X[lo:lo + batch]))
+        assert sharded.stats()["stage1"] == "parallel"
         want = index.query(Q, top_k=top_k)
         got = sharded.query(Q, top_k=top_k)  # warmup + conformance check
         assert np.array_equal(np.asarray(want[0]), np.asarray(got[0]))
         assert np.array_equal(want[1], got[1])
+        reps = 3 if TINY else 10
         lat = []
-        for _ in range(3 if TINY else 10):
+        for _ in range(reps):
             t0 = time.perf_counter()
             sharded.query(Q, top_k=top_k)
             lat.append((time.perf_counter() - t0) * 1e3)
         p50s = float(np.percentile(np.asarray(lat), 50))
         rows.append(("index_query_sharded", p50s * 1e3,
                      f"p50_ms={p50s:.2f}|shards={sharded.n_shards}"))
+
+        # the shard_map stage-1 fan vs the sequential-dispatch stage 1 over
+        # the same segments, both on a pre-sketched query — the sketch cost
+        # is identical either way, so this isolates the stage-1 difference
+        from repro.core.sketch import sketch as sketch_rows
+        from repro.index.sharded import sharded_fan_topk
+
+        qsk = sketch_rows(Q, sharded.key, sharded.cfg)
+        par = sharded.query_sketch(qsk, top_k=top_k)  # warmup (parallel fan)
+        disp = sharded_fan_topk(qsk, sharded._segments(), sharded.cfg,
+                                sharded.devices, top_k=top_k,
+                                engine=sharded.engine)  # warmup (dispatch)
+        for d, i in (par, disp):
+            assert np.array_equal(np.asarray(got[0]), np.asarray(d))
+            assert np.array_equal(got[1], i)
+        lat_p, lat_d = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sharded.query_sketch(qsk, top_k=top_k)
+            lat_p.append((time.perf_counter() - t0) * 1e3)
+            t0 = time.perf_counter()
+            sharded_fan_topk(qsk, sharded._segments(), sharded.cfg,
+                             sharded.devices, top_k=top_k,
+                             engine=sharded.engine)
+            lat_d.append((time.perf_counter() - t0) * 1e3)
+        p50p = float(np.percentile(np.asarray(lat_p), 50))
+        p50d = float(np.percentile(np.asarray(lat_d), 50))
+        rows.append(("stage1_parallel", p50p * 1e3,
+                     f"p50_ms={p50p:.2f}|dispatch_ms={p50d:.2f}"
+                     f"|shards={sharded.n_shards}"))
 
     emit(rows)
 

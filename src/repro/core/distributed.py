@@ -32,7 +32,13 @@ from .decomposition import power_moments
 from .pairwise import pack_sketch
 from .sketch import LpSketch, SketchConfig, sketch
 
-__all__ = ["sketch_sharded", "pairwise_sharded", "knn_sharded", "mesh_shard_devices"]
+__all__ = [
+    "sketch_sharded",
+    "pairwise_sharded",
+    "knn_sharded",
+    "stacked_topk_shards",
+    "mesh_shard_devices",
+]
 
 
 def _tuple(axes) -> tuple:
@@ -206,6 +212,82 @@ def pairwise_sharded(
     )(A, B, norms, norms)
     rows, cols = np.nonzero(np.asarray(mask))  # row-major, == engine order
     return rows, cols
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mesh", "top_k", "col_block", "backend", "data_axes"),
+)
+def stacked_topk_shards(
+    Aq: jax.Array,
+    nq: jax.Array,
+    B_stack: jax.Array,
+    nb_stack: jax.Array,
+    mask_stack: jax.Array,
+    pos_stack: jax.Array,
+    *,
+    mesh: Mesh,
+    top_k: int,
+    col_block: int,
+    backend: str = "xla",
+    data_axes: Sequence[str] | str = "data",
+):
+    """Stage 1 of a sharded top-k fan as ONE ``shard_map`` over stacked blocks.
+
+    Every shard holds an equal-shape block of packed corpus factors —
+    ``B_stack`` (S, R, W) / ``nb_stack`` (S, R) placed along ``data_axes`` —
+    padded with masked-off rows so all shards run the identical SPMD program.
+    The (tiny, replicated) query factors stream each shard's R rows through
+    the engine's scanned strip merge concurrently on all shards; only the
+    per-shard (q, k) candidate lists ever leave a device, never a distance
+    strip, and no collective runs at all — stage 2 (the host-side
+    ``rerank_topk`` lexsort over the gathered lists) owns the merge.
+
+    ``mask_stack`` masks tombstones and padding to ``+inf`` after the strip
+    estimate and ``pos_stack`` globalizes candidates, so live values — and,
+    after the (value, position) re-rank, tie-broken ids — are bit-identical
+    to the single-host fan.  R must be a multiple of ``col_block``.
+
+    Returns (vals, positions), both (S, q, k) with k = min(top_k, R),
+    sharded over ``data_axes`` on the leading axis.
+    """
+    from repro.engine.backends import strip_distances
+    from repro.engine.reduce import stacked_topk_scan
+
+    data_axes = _tuple(data_axes)
+    q = Aq.shape[0]
+    _, R, W = B_stack.shape
+    if R % col_block != 0:
+        raise ValueError(f"stack rows {R} not a multiple of col_block {col_block}")
+    n_strips = R // col_block
+    k = min(top_k, R)
+
+    def local_topk(aq, nq_, b, nb_, m, p):
+        # squeeze the shard axis: each shard sees one (R, ...) block
+        b, nb_, m, p = b[0], nb_[0], m[0], p[0]
+
+        def strip_fn(xs):
+            bb, nbb = xs
+            return strip_distances(aq, bb, nq_, nbb, backend=backend, clip=True)
+
+        vals, pos = stacked_topk_scan(
+            strip_fn,
+            (b.reshape(n_strips, col_block, W), nb_.reshape(n_strips, col_block)),
+            m.reshape(n_strips, col_block),
+            p.reshape(n_strips, col_block),
+            rows=q, top_k=k,
+        )
+        return vals[None], pos[None]
+
+    spec_blk = P(data_axes, None, None)
+    spec_row = P(data_axes, None)
+    return shard_map(
+        local_topk,
+        mesh=mesh,
+        in_specs=(P(None, None), P(None), spec_blk, spec_row, spec_row, spec_row),
+        out_specs=(spec_blk, spec_blk),
+        check_vma=False,
+    )(Aq, nq, B_stack, nb_stack, mask_stack, pos_stack)
 
 
 def knn_sharded(

@@ -23,6 +23,7 @@ from .backends import strip_distances
 __all__ = [
     "streaming_topk",
     "streaming_topk_strips",
+    "stacked_topk_scan",
     "merge_topk",
     "rerank_topk",
     "strip_bounds",
@@ -102,6 +103,54 @@ def streaming_topk_strips(
         D = strip_fn(c0, c1)
         cand_vals, cand_idx = _strip_topk(D, min(k, c1 - c0), jnp.int32(c0))
         vals, idx = merge_topk(vals, idx, cand_vals, cand_idx, k)
+    return vals, idx
+
+
+def stacked_topk_scan(
+    strip_fn: Callable,
+    strips,
+    mask: jax.Array,
+    pos: jax.Array,
+    *,
+    rows: int,
+    top_k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Masked streaming top-k over uniform stacked strips via ``lax.scan``.
+
+    The strip-unrolled folds (``streaming_topk_strips``) compile one program
+    per strip count, so a traced fan over a large corpus pays compile time
+    O(corpus).  Here the operands arrive pre-stacked — ``strips`` is a pytree
+    of (n_strips, col_block, ...) arrays and ``strip_fn(strip_slice)`` maps
+    one (col_block, ...) slice of each leaf to a (rows, col_block) distance
+    strip — so a single scanned strip body serves any corpus size.
+
+    ``mask``/``pos`` are (n_strips, col_block): columns with a False mask
+    (tombstones and block padding) are forced to ``+inf`` *after* the strip
+    estimate, keeping live values bit-identical, and candidate columns are
+    reported through ``pos`` (global positions; padding carries the int32
+    sentinel).  Strips must be stacked in ascending position order: the merge
+    then resolves equal values to the smallest position, the dense contract.
+
+    Returns (vals, positions), both (rows, k) with k = min(top_k, total
+    stacked columns), ascending.
+    """
+    n_strips, col_block = mask.shape
+    k = min(top_k, n_strips * col_block)
+    c = min(k, col_block)
+    init = (
+        jnp.full((rows, k), jnp.inf, jnp.float32),
+        jnp.full((rows, k), _IDX_SENTINEL, jnp.int32),
+    )
+
+    def body(carry, xs):
+        strip_slice, m, p = xs
+        D = strip_fn(strip_slice)
+        D = jnp.where(m[None, :], D, jnp.inf)
+        neg, j = jax.lax.top_k(-D, c)
+        vals, idx = merge_topk(*carry, -neg, p[j].astype(jnp.int32), k)
+        return (vals, idx), None
+
+    (vals, idx), _ = jax.lax.scan(body, init, (strips, mask, pos))
     return vals, idx
 
 

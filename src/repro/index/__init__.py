@@ -22,7 +22,7 @@ segments off the query path and swaps them in atomically.
 
 from .query import MicroBatcher, fan_topk, threshold_scan
 from .segment import ActiveSegment, SealedSegment, SketchReservoir
-from .service import CompactionHandle, IndexConfig, SketchIndex
+from .service import CompactionHandle, CompactionPolicy, IndexConfig, SketchIndex
 from .sharded import ShardedSketchIndex, sharded_fan_topk, sharded_threshold_scan
 from .store import load_index, save_index
 
@@ -31,6 +31,7 @@ __all__ = [
     "ShardedSketchIndex",
     "IndexConfig",
     "CompactionHandle",
+    "CompactionPolicy",
     "MicroBatcher",
     "ActiveSegment",
     "SealedSegment",

@@ -42,6 +42,37 @@ _IDX_SENTINEL = np.iinfo(np.int32).max
 Segment = Union[ActiveSegment, SealedSegment]
 
 
+def _check_top_k(top_k) -> None:
+    """Friendly contract errors instead of shape crashes deep in the fan.
+
+    ``top_k`` larger than the live-row count is fine — every fan returns
+    min(top_k, live) columns, even off shards holding only padded stacked
+    blocks — but a negative or non-integer k would otherwise surface as an
+    inscrutable reshape/top_k shape error strips deep."""
+    if isinstance(top_k, bool) or not isinstance(top_k, (int, np.integer)):
+        raise ValueError(
+            f"top_k must be an integer, got {type(top_k).__name__} {top_k!r}")
+    if top_k < 0:
+        raise ValueError(
+            f"top_k must be >= 0, got {top_k} (results always have "
+            "min(top_k, live rows) columns; ask for 0 to get none)")
+
+
+def _finite_k(vals_np: np.ndarray, k_out: int) -> int:
+    """Shrink k_out to the finite candidates every query row actually has.
+
+    ``k_out = min(top_k, n_live)`` is computed from a live-count snapshot; a
+    delete racing the fan can tombstone rows after that snapshot, leaving
+    fewer finite candidates than promised.  Masked (dead/padded) candidates
+    carry ``+inf``, so clamping to the per-row finite count returns a
+    narrower (still consistent) answer instead of surfacing dead rows or
+    sentinel positions.  ``vals_np`` is the full candidate array, sorted or
+    not — finite entries are counted, never assumed to be a prefix."""
+    if vals_np.shape[0] == 0 or k_out == 0:
+        return k_out
+    return min(k_out, int(np.isfinite(vals_np).sum(axis=1).min()))
+
+
 def _pack_query(qsk: LpSketch, cfg: SketchConfig, estimator: str):
     """Query-side factors, computed once per fan (segment-invariant)."""
     if estimator != "plain":
@@ -150,6 +181,7 @@ def fan_topk(
     k = min(top_k, total live rows).  Dead/padded rows never surface."""
     if estimator not in ("plain", "mle"):
         raise ValueError(f"unknown estimator {estimator!r}")
+    _check_top_k(top_k)
     backend, _, col_block = (engine or EngineConfig()).resolve()
     q = qsk.n
     n_live = sum(seg.live_count for seg in segments)
@@ -175,6 +207,7 @@ def fan_topk(
         base += n
 
     pos_to_id = np.concatenate(id_map) if id_map else np.zeros(0, np.int64)
+    k_out = _finite_k(np.asarray(vals), k_out)
     pos = np.asarray(idx[:, :k_out])
     return vals[:, :k_out], pos_to_id[pos]
 
@@ -231,7 +264,11 @@ class MicroBatcher:
             self.error: Optional[BaseException] = None
 
     def query(self, rows, top_k: int = 10, estimator: str = "plain"):
-        """(distances (b, k), row_ids (b, k)) for this caller's rows."""
+        """(distances (b, k), row_ids (b, k)) for this caller's rows, with
+        k = min(top_k, index live rows).  Validated up front: a malformed
+        ``top_k`` fails only this caller, never the coalesced batch it would
+        otherwise poison."""
+        _check_top_k(top_k)
         rows = np.atleast_2d(np.asarray(rows))
         if rows.shape[0] == 0:
             # empty request: answer immediately — joining a batch would push

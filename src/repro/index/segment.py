@@ -30,7 +30,14 @@ import numpy as np
 from repro.core.pairwise import pack_sketch
 from repro.core.sketch import LpSketch, SketchConfig
 
-__all__ = ["ActiveSegment", "SealedSegment", "SketchReservoir"]
+__all__ = [
+    "ActiveSegment",
+    "SealedSegment",
+    "SketchReservoir",
+    "pack_shard_stack",
+    "shard_stack_live",
+    "packed_stack_width",
+]
 
 # never present a 1-row segment to the engine: a (n, K) x (K, 1) strip
 # lowers as GEMV, breaking the engine's bit-for-bit contract with dense
@@ -83,8 +90,11 @@ class SealedSegment:
         self.live = (np.ones(n, bool) if live is None
                      else np.asarray(live, bool).copy())
         self.shard = None     # placement tag (set by sharded indexes)
+        self.live_version = 0  # bumped on every tombstone write (mask caches)
         self._packed = None   # (B, nb) right factors, built lazily per cfg
         self._mask_dev = None
+        self._live_count = int(self.live.sum())
+        self._live_count_version = 0
 
     @property
     def n(self) -> int:
@@ -92,7 +102,13 @@ class SealedSegment:
 
     @property
     def live_count(self) -> int:
-        return int(self.live.sum())
+        """Cached per tombstone version: the compaction policy consults this
+        on every write batch, and an O(n) bitmap scan per segment per write
+        (under the index lock) would make the write path O(corpus)."""
+        if self._live_count_version != self.live_version:
+            self._live_count = int(self.live.sum())
+            self._live_count_version = self.live_version
+        return self._live_count
 
     @property
     def live_fraction(self) -> float:
@@ -100,6 +116,7 @@ class SealedSegment:
 
     def delete_local(self, local_idx) -> None:
         self.live[local_idx] = False
+        self.live_version += 1
         self._mask_dev = None
 
     def packed(self, cfg: SketchConfig):
@@ -196,6 +213,75 @@ class ActiveSegment:
         n = max(self.size, _MIN_SEGMENT_ROWS)
         sk = LpSketch(U=self.U[:n], moments=self.moments[:n])
         return SealedSegment(sk, self.row_ids[:n].copy(), self.live[:n].copy())
+
+
+# ---------------------------------------------------------------------------
+# Stacked packing: equal-shape per-shard blocks for the shard_map stage-1 fan
+# ---------------------------------------------------------------------------
+
+
+def packed_stack_width(cfg: SketchConfig) -> int:
+    """Column count of ``pack_sketch``'s packed factors: one k-wide slab per
+    interaction order (needed to shape all-padding blocks on empty shards)."""
+    from repro.core.decomposition import interaction_orders
+
+    return len(interaction_orders(cfg.p)) * cfg.k
+
+
+def pack_shard_stack(group, rows: int, cfg: SketchConfig, device=None):
+    """Pack one shard's sealed segments into a single equal-shape block.
+
+    ``group`` is ``[(global position base, SealedSegment), ...]`` in ingest
+    order; ``rows`` is the fleet-wide uniform block height (>= this shard's
+    total rows, a multiple of the engine's col_block).  Segments' cached
+    packed factors are concatenated on the shard's own device and zero-padded
+    to ``rows`` — padding never surfaces because the stacked fan masks it to
+    ``+inf`` — so every shard presents the identical SPMD operand shape.
+
+    Returns ``(B (rows, W), nb (rows,))`` committed to ``device`` plus the
+    host-side position map ``pos (rows,) int32`` (global position per row,
+    the int32 sentinel on padding).  The live mask is deliberately NOT built
+    here: factors change only when the segment list changes, tombstones on
+    every delete — see :func:`shard_stack_live`.
+    """
+    W = packed_stack_width(cfg)
+    sentinel = np.iinfo(np.int32).max
+    pos = np.full(rows, sentinel, np.int32)
+    parts_B, parts_nb, r0 = [], [], 0
+    for base, seg in group:
+        B, nb = seg.packed(cfg)
+        parts_B.append(B)
+        parts_nb.append(nb)
+        pos[r0:r0 + seg.n] = base + np.arange(seg.n, dtype=np.int32)
+        r0 += seg.n
+    if r0 > rows:
+        raise ValueError(f"shard holds {r0} rows > stack height {rows}")
+    n_pad = rows - r0
+    if not parts_B:
+        dtype = jnp.dtype(cfg.projection.dtype)
+        B_blk = jnp.zeros((rows, W), dtype)
+        nb_blk = jnp.zeros((rows,), jnp.float32)
+    else:
+        if n_pad:
+            parts_B.append(jnp.zeros((n_pad, W), parts_B[0].dtype))
+            parts_nb.append(jnp.zeros((n_pad,), parts_nb[0].dtype))
+        B_blk = jnp.concatenate(parts_B, axis=0)
+        nb_blk = jnp.concatenate(parts_nb, axis=0)
+    if device is not None:
+        B_blk = jax.device_put(B_blk, device)
+        nb_blk = jax.device_put(nb_blk, device)
+    return B_blk, nb_blk, pos
+
+
+def shard_stack_live(group, rows: int) -> np.ndarray:
+    """(rows,) host live mask for one shard's stacked block: per-segment
+    tombstone bitmaps in stack order, False on block padding."""
+    live = np.zeros(rows, bool)
+    r0 = 0
+    for _base, seg in group:
+        live[r0:r0 + seg.n] = seg.live
+        r0 += seg.n
+    return live
 
 
 class SketchReservoir:

@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +28,7 @@ from repro.engine import EngineConfig
 from .query import fan_topk, threshold_scan
 from .segment import ActiveSegment, SealedSegment
 
-__all__ = ["IndexConfig", "SketchIndex", "CompactionHandle"]
+__all__ = ["IndexConfig", "CompactionPolicy", "SketchIndex", "CompactionHandle"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +50,44 @@ class IndexConfig:
             raise ValueError("segment_capacity must be >= 2")
         if not 0.0 <= self.min_live_frac <= 1.0:
             raise ValueError("min_live_frac must be in [0, 1]")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Scheduling policy that drives ``compact_async`` off the write path.
+
+    The blocking/async compaction calls already exist; this decides *when*
+    they fire.  ``maybe_compact()`` (called automatically after every delete
+    and ingest when ``auto`` is set, or manually by an operator loop) starts
+    one background pass iff
+
+      * some sealed segment's live fraction has decayed to
+        ``live_frac_trigger`` or below,
+      * at least ``min_interval_s`` elapsed since the last pass *started*
+        (manual ``compact``/``compact_async`` calls arm the limiter too), and
+      * no compaction is currently in flight (one pass at a time is the
+        ``compact_async`` contract; the policy never queues a second).
+
+    Attributes:
+      live_frac_trigger: segment live-fraction at/below which a rewrite is
+        worth scheduling (forwarded to ``compact_async`` as its threshold).
+      min_interval_s: minimum seconds between scheduled pass starts — the
+        rate limit that keeps a delete storm from compacting continuously.
+      auto: hook the check into ``delete``/``ingest`` (False = only explicit
+        ``maybe_compact()`` calls consult the policy).
+      clock: monotonic time source (injectable for deterministic tests).
+    """
+
+    live_frac_trigger: float = 0.5
+    min_interval_s: float = 60.0
+    auto: bool = True
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        if not 0.0 <= self.live_frac_trigger <= 1.0:
+            raise ValueError("live_frac_trigger must be in [0, 1]")
+        if self.min_interval_s < 0:
+            raise ValueError("min_interval_s must be >= 0")
 
 
 class CompactionHandle:
@@ -86,12 +125,14 @@ class SketchIndex:
 
     def __init__(self, cfg: SketchConfig, *, seed: int = 0,
                  index_cfg: Optional[IndexConfig] = None,
-                 engine: Optional[EngineConfig] = None):
+                 engine: Optional[EngineConfig] = None,
+                 policy: Optional[CompactionPolicy] = None):
         self.cfg = cfg
         self.seed = seed
         self.key = jax.random.key(seed)
         self.index_cfg = index_cfg or IndexConfig()
         self.engine = engine
+        self.policy = policy
         self.sealed: List[SealedSegment] = []
         self.active = ActiveSegment(cfg, self.index_cfg.segment_capacity)
         self.next_row_id = 0
@@ -102,6 +143,8 @@ class SketchIndex:
         self._lock = threading.RLock()
         self.generation = 0  # bumped on every atomic segment-list flip
         self._compaction: Optional[CompactionHandle] = None
+        self._last_compaction_start: Optional[float] = None
+        self.auto_compactions = 0  # policy-triggered passes, for observability
 
     # ------------------------------------------------------------------ state
 
@@ -127,6 +170,7 @@ class SketchIndex:
             "next_row_id": self.next_row_id,
             "generation": self.generation,
             "compacting": bool(self._compaction and not self._compaction.done),
+            "auto_compactions": self.auto_compactions,
         }
 
     def _segments(self) -> Sequence[Union[ActiveSegment, SealedSegment]]:
@@ -140,6 +184,13 @@ class SketchIndex:
     # ---------------------------------------------------------- placement
     # Hooks the sharded index overrides: the base index keeps every segment
     # wherever jax put it and tags no shard.
+
+    def _segments_changed(self) -> None:
+        """Called (under the lock) whenever the sealed list changes — seal,
+        compaction swap, restore.  The sharded index drops its stacked
+        stage-1 operand cache here so swapped-out segments (and their
+        corpus-sized device stacks) are released promptly instead of on the
+        next plain top-k query."""
 
     def _shard_for_new_segment(self) -> Optional[int]:
         return None
@@ -176,7 +227,8 @@ class SketchIndex:
                 off += take
                 if self.active.remaining == 0:
                     self.seal_active()
-            return ids
+        self._maybe_auto_compact()
+        return ids
 
     def seal_active(self) -> None:
         """Freeze the active segment and open a fresh one."""
@@ -191,12 +243,14 @@ class SketchIndex:
                 if rid >= 0:
                     self._loc[int(rid)] = (seg_idx, local)
             self.active = ActiveSegment(self.cfg, self.index_cfg.segment_capacity)
+            self._segments_changed()
 
     def _install_loaded_segment(self, seg: SealedSegment) -> None:
         """Append a segment restored from storage, honoring placement."""
         with self._lock:
             self.sealed.append(
                 self._place_segment(seg, self._shard_for_new_segment()))
+            self._segments_changed()
 
     # ----------------------------------------------------------------- delete
 
@@ -213,9 +267,37 @@ class SketchIndex:
                 if seg.live[local]:
                     seg.delete_local(local)
                     removed += 1
-            return removed
+        if removed:
+            self._maybe_auto_compact()
+        return removed
 
     # ------------------------------------------------------------- compaction
+
+    def maybe_compact(self) -> Optional[CompactionHandle]:
+        """Consult the :class:`CompactionPolicy` and start one background
+        pass if it is due; returns its handle, or None when the policy
+        declines (no policy, decay threshold not reached, rate limited, or a
+        pass already in flight)."""
+        pol = self.policy
+        if pol is None:
+            return None
+        now = pol.clock()
+        with self._lock:
+            if self._compaction is not None and not self._compaction.done:
+                return None  # one pass at a time; never queue behind it
+            if (self._last_compaction_start is not None
+                    and now - self._last_compaction_start < pol.min_interval_s):
+                return None
+            if not any(seg.live_fraction <= pol.live_frac_trigger
+                       for seg in self.sealed):
+                return None
+            self.auto_compactions += 1
+            return self.compact_async(pol.live_frac_trigger)
+
+    def _maybe_auto_compact(self) -> None:
+        """Write-path hook: policy check after every delete/ingest batch."""
+        if self.policy is not None and self.policy.auto:
+            self.maybe_compact()
 
     def compact(self, min_live_frac: Optional[float] = None) -> int:
         """Rewrite sealed segments at/below the live-fraction threshold to
@@ -225,6 +307,7 @@ class SketchIndex:
 
         Blocking variant: builds and swaps inline.  ``compact_async`` runs
         the same plan/build/swap off the query path."""
+        self._arm_rate_limit()
         plan = self._compaction_plan(min_live_frac)
         built = [(seg, snap, self._build_replacement(seg, snap))
                  for seg, snap in plan]
@@ -246,6 +329,7 @@ class SketchIndex:
         with self._lock:
             if self._compaction is not None and not self._compaction.done:
                 return self._compaction  # one pass at a time; join the running one
+            self._arm_rate_limit()
             handle = CompactionHandle()
             plan = self._compaction_plan(min_live_frac)
 
@@ -267,6 +351,12 @@ class SketchIndex:
             self._compaction = handle
             handle._thread.start()
         return handle
+
+    def _arm_rate_limit(self) -> None:
+        """Every pass start (manual or policy-driven) arms the policy's
+        min-interval limiter, so operator-invoked compactions count too."""
+        if self.policy is not None:
+            self._last_compaction_start = self.policy.clock()
 
     def _build_replacement(self, seg: SealedSegment,
                            snap: np.ndarray) -> Optional[SealedSegment]:
@@ -309,11 +399,13 @@ class SketchIndex:
                 newly_dead = seg.row_ids[snap & ~seg.live]
                 if len(newly_dead):
                     rep.live[np.isin(rep.row_ids, newly_dead)] = False
+                    rep.live_version += 1
                     rep._mask_dev = None
                 out[slot] = rep
             self.sealed = [s for s in out if s is not None]
             self._reindex()
             self.generation += 1
+            self._segments_changed()
             return rewritten
 
     def _reindex(self) -> None:
@@ -367,10 +459,10 @@ class SketchIndex:
         return save_index(path, self)
 
     @classmethod
-    def load(cls, path: str, *, engine: Optional[EngineConfig] = None
-             ) -> "SketchIndex":
+    def load(cls, path: str, *, engine: Optional[EngineConfig] = None,
+             policy: Optional[CompactionPolicy] = None) -> "SketchIndex":
         from .store import load_index
-        return load_index(path, engine=engine)
+        return load_index(path, engine=engine, policy=policy)
 
     # ----------------------------------------------------- corpus export
 

@@ -29,6 +29,23 @@ candidate source.  Background compaction (``compact_async``) rebuilds a
 shard's segments on that same shard and swaps them in under the index
 generation flip; ``load`` re-spreads a stored index over whatever mesh the
 restoring process was launched with via per-segment ``device_put``.
+
+Stage 1 runs in one of two modes:
+
+  parallel (the default whenever a mesh is available)  each shard's sealed
+      segments are packed into one equal-shape block — concatenated packed
+      factors, zero-padded to a fleet-wide uniform height, padding and
+      tombstones live-masked to +inf — placed along the mesh's ``data`` axis,
+      and ALL shards fold their strips concurrently inside a single
+      ``shard_map`` (``core.distributed.stacked_topk_shards``); stage-1
+      wall-clock is the slowest shard, not the sum.  Plain packed-matmul
+      strips are bitwise invariant to the re-tiling (the conformance suite's
+      strip-invariance property), so results stay bit-identical.
+  dispatch (fallback)  the per-segment async-dispatch fan below — used when
+      no usable mesh exists (duplicate device lists), and always for the
+      ``mle`` estimator, whose per-strip Newton solves are NOT bitwise stable
+      under XLA fusion contexts; keeping mle on the exact single-host strip
+      programs is what keeps it bit-identical.
 """
 
 from __future__ import annotations
@@ -38,22 +55,36 @@ from typing import List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
-from repro.core.distributed import mesh_shard_devices
+from repro.core.distributed import (
+    _tuple as _axes_tuple,
+    mesh_shard_devices,
+    stacked_topk_shards,
+)
 from repro.core.sketch import LpSketch, SketchConfig
 from repro.engine import EngineConfig
 from repro.engine.reduce import rerank_topk
 
 from .query import (
     _IDX_SENTINEL,
+    _check_top_k,
+    _finite_k,
     _fold_segment_topk,
     _merge_threshold_hits,
     _pack_query,
     _segment_rows,
     _segment_threshold_hits,
 )
-from .segment import ActiveSegment, SealedSegment
-from .service import IndexConfig, SketchIndex
+from .segment import (
+    ActiveSegment,
+    SealedSegment,
+    pack_shard_stack,
+    packed_stack_width,
+    shard_stack_live,
+)
+from .service import CompactionPolicy, IndexConfig, SketchIndex
 
 __all__ = ["ShardedSketchIndex", "sharded_fan_topk", "sharded_threshold_scan"]
 
@@ -108,6 +139,75 @@ def _shard_candidates(qsk, q_packed, group, cfg, estimator, backend,
     return vals, idx
 
 
+def _ids_for_positions(segments, pos: np.ndarray) -> np.ndarray:
+    """Translate global positions -> stable row ids in O(k log S + S).
+
+    The fans used to concatenate every segment's row_ids into one corpus-
+    sized map per query; only the (q, k) result positions ever need
+    translating, so bucket them by segment instead."""
+    bases = np.cumsum([0] + [_segment_rows(s) for s in segments])
+    out = np.empty(pos.shape, np.int64)
+    seg_of = np.searchsorted(bases, pos, side="right") - 1
+    for si in np.unique(seg_of):
+        m = seg_of == si
+        out[m] = segments[si].row_ids[pos[m] - bases[si]]
+    return out
+
+
+class _StackedOperands:
+    """Device-resident stage-1 operand stacks for one sealed-segment snapshot.
+
+    Factors (``B``/``nb``/``pos``) are immutable for a given segment list and
+    rebuild only when the list changes (seal / compaction swap / load) —
+    detected by the identity ``key``.  The live ``mask`` additionally tracks
+    per-segment tombstone versions, so a delete invalidates only the (cheap,
+    bool) mask and never the factor stacks."""
+
+    __slots__ = ("key", "groups", "rows", "col_block", "B", "nb", "pos",
+                 "mask", "mask_versions")
+
+    def __init__(self, key, groups, rows, col_block, B, nb, pos):
+        self.key = key
+        self.groups = groups
+        self.rows = rows
+        self.col_block = col_block
+        self.B, self.nb, self.pos = B, nb, pos
+        self.mask = None
+        self.mask_versions = None
+
+
+def _build_stacked_operands(shard_groups, n_shards, mesh, devices,
+                            cfg: SketchConfig, col_block: int, data_axes,
+                            key) -> _StackedOperands:
+    """Equal-shape per-shard blocks, assembled in place on the mesh.
+
+    Each shard's block is packed on its own device (``pack_shard_stack``) and
+    the global (S, rows, W) stacks are stitched from those single-device
+    blocks — the corpus factors never round-trip through the host."""
+    dax = _axes_tuple(data_axes)
+    rows = max(sum(_segment_rows(seg) for _b, seg in g) for _s, g in shard_groups)
+    rows = max(rows, col_block)
+    rows = -(-rows // col_block) * col_block  # whole strips only
+    group_of = dict(shard_groups)
+    W = packed_stack_width(cfg)
+    parts_B, parts_nb = [], []
+    pos = np.empty((n_shards, rows), np.int32)
+    for s in range(n_shards):
+        B_blk, nb_blk, pos_blk = pack_shard_stack(
+            group_of.get(s, []), rows, cfg, devices[s])
+        parts_B.append(B_blk[None])
+        parts_nb.append(nb_blk[None])
+        pos[s] = pos_blk
+    sh_blk = NamedSharding(mesh, P(dax, None, None))
+    sh_row = NamedSharding(mesh, P(dax, None))
+    B = jax.make_array_from_single_device_arrays(
+        (n_shards, rows, W), sh_blk, parts_B)
+    nb = jax.make_array_from_single_device_arrays(
+        (n_shards, rows), sh_row, parts_nb)
+    return _StackedOperands(key, shard_groups, rows, col_block, B, nb,
+                            jax.device_put(pos, sh_row))
+
+
 def sharded_fan_topk(
     qsk: LpSketch,
     segments: Sequence[Segment],
@@ -125,6 +225,7 @@ def sharded_fan_topk(
     lexsort reproduces the dense tie-break regardless of placement."""
     if estimator not in ("plain", "mle"):
         raise ValueError(f"unknown estimator {estimator!r}")
+    _check_top_k(top_k)
     backend, _, col_block = (engine or EngineConfig()).resolve()
     q = qsk.n
     n_live = sum(seg.live_count for seg in segments)
@@ -148,12 +249,10 @@ def sharded_fan_topk(
     # only the (q, k) candidate lists cross the shard boundary
     all_vals = [np.asarray(jax.device_get(v)) for v, _ in pending]
     all_idx = [np.asarray(jax.device_get(i)) for _, i in pending]
-    vals, idx = rerank_topk(np.concatenate(all_vals, axis=1),
-                            np.concatenate(all_idx, axis=1), k_out)
-
-    pos_to_id = np.concatenate([seg.row_ids[:_segment_rows(seg)]
-                                for seg in segments])
-    return vals, pos_to_id[np.asarray(idx)]
+    cat_vals = np.concatenate(all_vals, axis=1)
+    k_out = _finite_k(cat_vals, k_out)
+    vals, idx = rerank_topk(cat_vals, np.concatenate(all_idx, axis=1), k_out)
+    return vals, _ids_for_positions(segments, np.asarray(idx))
 
 
 def sharded_threshold_scan(
@@ -194,25 +293,48 @@ class ShardedSketchIndex(SketchIndex):
     """A ``SketchIndex`` whose sealed segments live across a device mesh.
 
     Construction takes either a ``mesh`` (the shard list is the mesh's data
-    axis, via ``mesh_shard_devices``) or an explicit ``devices`` list.  The
-    full lifecycle — ingest, delete, compact/compact_async, save, load — is
-    inherited; placement rides on the base class's ``_place_segment`` hook,
-    so sealing, background-compaction swaps, and reload all land segments on
-    their shard without special cases.
+    axis, via ``mesh_shard_devices``) or an explicit ``devices`` list; with a
+    distinct explicit device list a serving mesh is built automatically, so
+    the restore path keeps the parallel stage-1 fan.  The full lifecycle —
+    ingest, delete, compact/compact_async, save, load — is inherited;
+    placement rides on the base class's ``_place_segment`` hook, so sealing,
+    background-compaction swaps, and reload all land segments on their shard
+    without special cases.
     """
 
     def __init__(self, cfg: SketchConfig, *, seed: int = 0,
                  index_cfg: Optional[IndexConfig] = None,
                  engine: Optional[EngineConfig] = None,
                  mesh=None, devices: Optional[Sequence] = None,
-                 data_axes="data"):
+                 data_axes="data", policy: Optional[CompactionPolicy] = None):
         if devices is None:
             devices = (mesh_shard_devices(mesh, data_axes)
                        if mesh is not None else jax.devices())
         self.devices = list(devices)
         if not self.devices:
             raise ValueError("sharded index needs at least one device")
-        super().__init__(cfg, seed=seed, index_cfg=index_cfg, engine=engine)
+        # normalized to a tuple once: downstream it feeds a static jit
+        # argument (hashability) and PartitionSpecs alike
+        self.data_axes = _axes_tuple(data_axes)
+        if mesh is None and len(set(self.devices)) == len(self.devices):
+            # distinct explicit devices: rebuild the serving mesh so the
+            # stacked shard_map fan survives restore-by-device-list
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(len(self.devices), devices=self.devices)
+        self.mesh = mesh
+        # the stacked fan needs shard i of the stack and segment placement to
+        # agree on a physical device; a mesh that disagrees with the explicit
+        # device list (or duplicate fake shards) falls back to dispatch mode
+        self._fan_mesh = None
+        if mesh is not None:
+            try:
+                if list(mesh_shard_devices(mesh, data_axes)) == self.devices:
+                    self._fan_mesh = mesh
+            except (KeyError, ValueError):
+                pass
+        self._stack: Optional[_StackedOperands] = None
+        super().__init__(cfg, seed=seed, index_cfg=index_cfg, engine=engine,
+                         policy=policy)
 
     @property
     def n_shards(self) -> int:
@@ -226,9 +348,16 @@ class ShardedSketchIndex(SketchIndex):
                 per_shard[seg.shard] += 1
         s["shards"] = self.n_shards
         s["segments_per_shard"] = per_shard
+        s["stage1"] = "parallel" if self._fan_mesh is not None else "dispatch"
         return s
 
     # ------------------------------------------------------------- placement
+
+    def _segments_changed(self) -> None:
+        # drop the stacked stage-1 operands with the segment list they were
+        # packed from: in-flight queries keep their own reference, the next
+        # plain top-k rebuilds from the new list
+        self._stack = None
 
     def _shard_for_new_segment(self) -> int:
         return len(self.sealed) % self.n_shards
@@ -253,9 +382,89 @@ class ShardedSketchIndex(SketchIndex):
 
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
                      estimator: str = "plain"):
-        return sharded_fan_topk(qsk, self._segments(), self.cfg, self.devices,
+        _check_top_k(top_k)
+        segments = self._segments()
+        if self._fan_mesh is not None and estimator == "plain":
+            out = self._stacked_fan_topk(qsk, segments, top_k)
+            if out is not None:
+                return out
+        return sharded_fan_topk(qsk, segments, self.cfg, self.devices,
                                 top_k=top_k, estimator=estimator,
                                 engine=self.engine)
+
+    # ------------------------------------------------- parallel stage-1 fan
+
+    def _stacked_operands(self, shard_groups, col_block: int
+                          ) -> _StackedOperands:
+        """Cached stacks for the current sealed snapshot (identity-keyed:
+        any seal / compaction swap / reload changes segment objects)."""
+        key = (col_block,) + tuple(
+            id(seg) for _s, g in shard_groups for _b, seg in g)
+        st = self._stack
+        if st is None or st.key != key:
+            st = _build_stacked_operands(
+                shard_groups, self.n_shards, self._fan_mesh, self.devices,
+                self.cfg, col_block, self.data_axes, key)
+            self._stack = st
+        return st
+
+    def _stacked_mask(self, st: _StackedOperands):
+        """(S, rows) device live mask, rebuilt only when tombstones moved."""
+        versions = tuple(
+            seg.live_version for _s, g in st.groups for _b, seg in g)
+        if st.mask is None or st.mask_versions != versions:
+            m = np.zeros((self.n_shards, st.rows), bool)
+            for s, g in st.groups:
+                m[s] = shard_stack_live(g, st.rows)
+            st.mask = jax.device_put(
+                m, NamedSharding(self._fan_mesh, P(self.data_axes, None)))
+            st.mask_versions = versions
+        return st.mask
+
+    def _stacked_fan_topk(self, qsk: LpSketch, segments, top_k: int):
+        """Stage 1 under ``shard_map``: all shards fold their stacked strips
+        concurrently; stage 2 is the same host-side (value, position) re-rank
+        as the dispatch fan, so results are bit-identical to it (and to the
+        single-host index).  Returns None when nothing is sharded yet."""
+        backend, _, col_block = (self.engine or EngineConfig()).resolve()
+        groups, _ = _group_by_shard(segments, self.n_shards)
+        shard_groups = [(s, g) for s, g in groups if s is not None]
+        if not shard_groups:
+            return None  # no sealed shards: the dispatch fan is the fan
+        q = qsk.n
+        n_live = sum(seg.live_count for seg in segments)
+        k_out = min(top_k, n_live)
+        if k_out == 0:
+            return (jnp.zeros((q, 0), jnp.float32), np.zeros((q, 0), np.int64))
+
+        st = self._stacked_operands(shard_groups, col_block)
+        q_packed = _pack_query(qsk, self.cfg, "plain")
+        Aq, nq = q_packed
+        # one shard_map dispatch covers every shard's stage-1 fold ...
+        # clamp the static top_k to the stack height: every k above it
+        # compiles the identical program, so don't mint new cache entries
+        vals_sh, pos_sh = stacked_topk_shards(
+            Aq, nq, st.B, st.nb, self._stacked_mask(st), st.pos,
+            mesh=self._fan_mesh, top_k=min(top_k, st.rows),
+            col_block=col_block, backend=backend, data_axes=self.data_axes)
+        # ... while the host-local group (active segment + any unplaced
+        # sealed block) folds through the same per-segment strips as always
+        local_pending = [
+            _shard_candidates(qsk, q_packed, grp, self.cfg, "plain", backend,
+                              col_block, top_k, q)
+            for s, grp in groups if s is None
+        ]
+
+        # only the (q, k) candidate lists leave the shards
+        vals_np = np.asarray(jax.device_get(vals_sh))
+        pos_np = np.asarray(jax.device_get(pos_sh))
+        local_vals = [np.asarray(jax.device_get(v)) for v, _ in local_pending]
+        local_pos = [np.asarray(jax.device_get(i)) for _, i in local_pending]
+        cat_vals = np.concatenate(list(vals_np) + local_vals, axis=1)
+        cat_pos = np.concatenate(list(pos_np) + local_pos, axis=1)
+        k_out = _finite_k(cat_vals, k_out)
+        vals, idx = rerank_topk(cat_vals, cat_pos, k_out)
+        return vals, _ids_for_positions(segments, np.asarray(idx))
 
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
@@ -269,13 +478,14 @@ class ShardedSketchIndex(SketchIndex):
     @classmethod
     def load(cls, path: str, *, engine: Optional[EngineConfig] = None,
              mesh=None, devices: Optional[Sequence] = None,
-             data_axes="data") -> "ShardedSketchIndex":
+             data_axes="data", policy: Optional[CompactionPolicy] = None
+             ) -> "ShardedSketchIndex":
         """Restore with sharding hints: each stored segment is ``device_put``
         onto its shard as it loads (multi-host restore path)."""
         from .store import load_index
         if mesh is None and devices is None:
             devices = jax.devices()
         index = load_index(path, engine=engine, mesh=mesh, devices=devices,
-                           data_axes=data_axes)
+                           data_axes=data_axes, policy=policy)
         assert isinstance(index, cls)
         return index

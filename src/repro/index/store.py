@@ -119,7 +119,8 @@ def save_index(path: str, index: SketchIndex) -> str:
 
 
 def load_index(path: str, *, engine: Optional[EngineConfig] = None,
-               mesh=None, devices=None, data_axes="data") -> SketchIndex:
+               mesh=None, devices=None, data_axes="data",
+               policy=None) -> SketchIndex:
     """Restore an index saved by ``save_index`` onto the current devices.
 
     With ``mesh`` (or an explicit ``devices`` list) the restore comes back as
@@ -138,10 +139,10 @@ def load_index(path: str, *, engine: Optional[EngineConfig] = None,
         from .sharded import ShardedSketchIndex  # local import: sharded imports store
         index: SketchIndex = ShardedSketchIndex(
             cfg, seed=manifest["seed"], index_cfg=icfg, engine=engine,
-            mesh=mesh, devices=devices, data_axes=data_axes)
+            mesh=mesh, devices=devices, data_axes=data_axes, policy=policy)
     else:
         index = SketchIndex(cfg, seed=manifest["seed"], index_cfg=icfg,
-                            engine=engine)
+                            engine=engine, policy=policy)
     index.next_row_id = manifest["next_row_id"]
     for i, meta in enumerate(manifest["segments"]):
         U = np.load(os.path.join(path, f"seg_{i:05d}.U.npy"))

@@ -18,13 +18,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
-def make_serving_mesh(n_shards: int | None = None):
+def make_serving_mesh(n_shards: int | None = None, *, devices=None):
     """The index-serving mesh: 1 x N over ("replica", "data").
 
-    The sharded sketch index spreads sealed segments over the ``data`` axis;
-    the width-1 ``replica`` axis keeps the mesh shape compatible with the
-    two-axis sharding rules everywhere else.  Defaults to every local
-    device."""
+    The sharded sketch index spreads sealed segments over the ``data`` axis
+    and runs its parallel stage-1 fan as one ``shard_map`` over it; the
+    width-1 ``replica`` axis keeps the mesh shape compatible with the
+    two-axis sharding rules everywhere else.  Defaults to every local device;
+    an explicit ``devices`` list pins the data axis to exactly those devices
+    in order (the restore-by-device-list path), bypassing ``jax.make_mesh``'s
+    own device selection."""
+    if devices is not None:
+        import numpy as np
+        from jax.sharding import Mesh
+
+        n = n_shards or len(devices)
+        if n != len(devices):
+            raise ValueError(f"n_shards={n} != len(devices)={len(devices)}")
+        return Mesh(np.asarray(devices).reshape(1, n), ("replica", "data"))
     n = n_shards or len(jax.devices())
     return make_mesh((1, n), ("replica", "data"))
 

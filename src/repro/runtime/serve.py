@@ -9,7 +9,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import LpSketch, SketchConfig
-from repro.index import IndexConfig, ShardedSketchIndex, SketchIndex
+from repro.index import (
+    CompactionPolicy,
+    IndexConfig,
+    ShardedSketchIndex,
+    SketchIndex,
+)
 
 __all__ = ["generate", "SketchKnnService"]
 
@@ -59,15 +64,17 @@ class SketchKnnService:
     segment_capacity: int = 4096
     mesh: Optional[object] = None
     devices: Optional[object] = None
+    policy: Optional[CompactionPolicy] = None
 
     def __post_init__(self):
         icfg = IndexConfig(segment_capacity=self.segment_capacity)
         if self.mesh is not None or self.devices is not None:
             self.index: SketchIndex = ShardedSketchIndex(
                 self.cfg, seed=self.seed, index_cfg=icfg,
-                mesh=self.mesh, devices=self.devices)
+                mesh=self.mesh, devices=self.devices, policy=self.policy)
         else:
-            self.index = SketchIndex(self.cfg, seed=self.seed, index_cfg=icfg)
+            self.index = SketchIndex(self.cfg, seed=self.seed, index_cfg=icfg,
+                                     policy=self.policy)
         self.key = self.index.key
 
     @property

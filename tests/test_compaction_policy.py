@@ -1,0 +1,202 @@
+"""Compaction scheduling policy (``CompactionPolicy``).
+
+The invariants the serving tier depends on:
+
+  * auto-trigger fires when (and only when) a sealed segment's live fraction
+    decays to the threshold — hooked after delete AND ingest batches;
+  * the min-interval rate limit bounds how often passes start, so a delete
+    storm can't turn the index into a full-time compactor;
+  * the policy never starts a second pass while one is in flight (the
+    ``compact_async`` one-pass-at-a-time contract), and never queues one;
+  * policy-driven passes go through the exact ``compact_async`` machinery,
+    so results stay bit-for-bit identical (checked against an unpoliced
+    single-host reference on the sharded class).
+
+All tests drive an injected deterministic clock — no sleeps, no wall time.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SketchConfig
+from repro.index import (
+    CompactionPolicy,
+    IndexConfig,
+    ShardedSketchIndex,
+    SketchIndex,
+)
+from repro.launch.mesh import make_serving_mesh
+
+CFG = SketchConfig(p=4, k=32, block_d=64)
+D = 256
+ICFG = IndexConfig(segment_capacity=32)
+
+
+class _Clock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+
+def _rows(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 1, (n, D)).astype(np.float32))
+
+
+def _policy(clock, **kw):
+    kw.setdefault("live_frac_trigger", 0.5)
+    kw.setdefault("min_interval_s", 10.0)
+    return CompactionPolicy(clock=clock, **kw)
+
+
+def _join(idx):
+    h = idx._compaction
+    if h is not None:
+        h.join(timeout=60)
+    return h
+
+
+def test_auto_trigger_fires_on_live_fraction_decay():
+    clock = _Clock()
+    idx = SketchIndex(CFG, index_cfg=ICFG, policy=_policy(clock))
+    ids = idx.ingest(_rows(64))  # two sealed segments, empty active
+    assert idx.auto_compactions == 0
+
+    idx.delete(ids[:10])  # seg0 at 22/32 > trigger: policy declines
+    assert idx.auto_compactions == 0 and idx.generation == 0
+
+    idx.delete(ids[10:20])  # seg0 decays to 12/32 <= 0.5: pass starts
+    assert idx.auto_compactions == 1
+    _join(idx)
+    assert idx.generation == 1
+    assert idx.sealed[0].live_fraction == 1.0  # rewritten to live rows
+    assert idx.n_live == 44
+
+
+def test_auto_trigger_respects_rate_limit():
+    clock = _Clock()
+    idx = SketchIndex(CFG, index_cfg=ICFG, policy=_policy(clock))
+    ids = idx.ingest(_rows(96))
+    idx.delete(ids[:20])
+    assert idx.auto_compactions == 1
+    _join(idx)
+
+    clock.now = 9.0  # second segment decays inside the refractory window
+    idx.delete(ids[32:52])
+    assert idx.auto_compactions == 1  # rate limited, NOT queued
+
+    clock.now = 10.0  # window open again: the next write triggers
+    idx.delete(ids[64:66])
+    assert idx.auto_compactions == 2
+    _join(idx)
+    assert all(s.live_fraction > 0.5 for s in idx.sealed)
+
+
+def test_manual_compactions_arm_the_rate_limit():
+    clock = _Clock()
+    idx = SketchIndex(CFG, index_cfg=ICFG, policy=_policy(clock))
+    ids = idx.ingest(_rows(64))
+    clock.now = 100.0
+    idx.compact(min_live_frac=1.0)  # operator pass arms the limiter
+    idx.delete(ids[:20])  # decayed, but inside the window
+    assert idx.auto_compactions == 0
+    clock.now = 110.0
+    assert idx.maybe_compact() is not None
+    assert idx.auto_compactions == 1
+    _join(idx)
+
+
+def test_policy_never_overlaps_inflight_compaction():
+    clock = _Clock()
+    idx = SketchIndex(CFG, index_cfg=ICFG,
+                      policy=_policy(clock, auto=False))
+    ids = idx.ingest(_rows(64))
+    idx.delete(ids[:20])
+
+    gate = threading.Event()
+    started = threading.Event()
+    orig = type(idx)._build_replacement
+
+    def slow_build(seg, snap):
+        started.set()
+        assert gate.wait(30)
+        return orig(idx, seg, snap)
+
+    idx._build_replacement = slow_build
+    h = idx.compact_async(min_live_frac=0.5)
+    assert started.wait(30)
+    # in flight: the policy declines even though decay + clock both allow
+    clock.now = 1000.0
+    assert idx.maybe_compact() is None
+    assert idx.auto_compactions == 0
+    gate.set()
+    assert h.join(timeout=60) > 0
+    # drained: the policy can fire again (new decay)
+    idx.delete(ids[32:52])
+    clock.now = 2000.0
+    assert idx.maybe_compact() is not None
+    assert idx.auto_compactions == 1
+    _join(idx)
+
+
+def test_auto_false_disables_write_path_hook():
+    clock = _Clock()
+    idx = SketchIndex(CFG, index_cfg=ICFG,
+                      policy=_policy(clock, auto=False))
+    ids = idx.ingest(_rows(64))
+    idx.delete(ids[:20])
+    assert idx.auto_compactions == 0  # deletes alone never trigger
+    assert idx.maybe_compact() is not None  # explicit checks still consult
+    assert idx.auto_compactions == 1
+    _join(idx)
+
+
+def test_ingest_hook_triggers_after_decay():
+    clock = _Clock()
+    idx = SketchIndex(CFG, index_cfg=ICFG, policy=_policy(clock))
+    ids = idx.ingest(_rows(64))
+    idx.delete(ids[:20])  # fires pass 1
+    assert idx.auto_compactions == 1
+    _join(idx)
+    clock.now = 5.0
+    idx.delete(ids[32:52])  # decayed again but rate limited
+    assert idx.auto_compactions == 1
+    clock.now = 20.0
+    idx.ingest(_rows(4, seed=1))  # the *ingest* hook picks it up
+    assert idx.auto_compactions == 2
+    _join(idx)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="live_frac_trigger"):
+        CompactionPolicy(live_frac_trigger=1.5)
+    with pytest.raises(ValueError, match="min_interval_s"):
+        CompactionPolicy(min_interval_s=-1.0)
+
+
+def test_sharded_policy_stays_bit_identical():
+    """Policy-driven background passes on the sharded class change nothing
+    the single-host reference can observe."""
+    clock = _Clock()
+    ref = SketchIndex(CFG, seed=7, index_cfg=ICFG)
+    sh = ShardedSketchIndex(CFG, seed=7, index_cfg=ICFG,
+                            mesh=make_serving_mesh(1),
+                            policy=_policy(clock))
+    Q = _rows(5, seed=9)
+    ids_r = ref.ingest(_rows(128))
+    ids_s = sh.ingest(_rows(128))
+    np.testing.assert_array_equal(ids_r, ids_s)
+    ref.delete(ids_r[:48])
+    sh.delete(ids_s[:48])  # decays shard segments; policy fires
+    assert sh.auto_compactions == 1
+    _join(sh)
+    assert sh.generation >= 1
+    d0, i0 = ref.query(Q, top_k=13)
+    d1, i1 = sh.query(Q, top_k=13)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(i0, i1)

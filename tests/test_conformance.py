@@ -246,13 +246,85 @@ def _interleaved_lifecycle(make_sharded, tmp_path):
 
 
 def test_sharded_lifecycle_matches_single_host(tmp_path):
-    """The acceptance property, in process, on the 1x1 serving mesh."""
+    """The acceptance property, in process, on the 1x1 serving mesh — with
+    the shard_map stage-1 fan enabled (the mesh makes it the default)."""
     mesh = make_serving_mesh(1)
 
     def make(cfg, icfg):
-        return ShardedSketchIndex(cfg, seed=7, index_cfg=icfg, mesh=mesh)
+        sh = ShardedSketchIndex(cfg, seed=7, index_cfg=icfg, mesh=mesh)
+        assert sh.stats()["stage1"] == "parallel"
+        return sh
 
     _interleaved_lifecycle(make, tmp_path)
+
+
+def test_stacked_fan_matches_dispatch_fan_and_single_host():
+    """The parallel (shard_map) stage 1 and the dispatch stage 1 are the
+    same function: identical values AND tie-broken ids, through deletes and
+    compaction padding, at top_k beyond the live count."""
+    from repro.index.sharded import sharded_fan_topk
+    from repro.core.sketch import sketch as sketch_rows
+
+    rng = np.random.default_rng(8)
+    X = rng.uniform(0, 1, (200, D)).astype(np.float32)
+    Q = jnp.asarray(rng.uniform(0, 1, (5, D)).astype(np.float32))
+    icfg = IndexConfig(segment_capacity=32)
+    ref = SketchIndex(CFG, seed=3, index_cfg=icfg)
+    sh = ShardedSketchIndex(CFG, seed=3, index_cfg=icfg,
+                            mesh=make_serving_mesh(1))
+    ids_r = ref.ingest(jnp.asarray(X))
+    ids_s = sh.ingest(jnp.asarray(X))
+    ref.delete(ids_r[30:150])
+    sh.delete(ids_s[30:150])
+    ref.compact(min_live_frac=0.9)  # ragged + padded segments
+    sh.compact(min_live_frac=0.9)
+
+    for top_k in (7, 200):
+        want = ref.query(Q, top_k=top_k)
+        got_par = sh.query(Q, top_k=top_k)  # parallel stage 1
+        qsk = sketch_rows(Q, sh.key, CFG)
+        got_disp = sharded_fan_topk(  # dispatch stage 1, same segments
+            qsk, sh._segments(), sh.cfg, sh.devices, top_k=top_k,
+            engine=sh.engine)
+        for got in (got_par, got_disp):
+            np.testing.assert_array_equal(np.asarray(want[0]),
+                                          np.asarray(got[0]))
+            np.testing.assert_array_equal(want[1], got[1])
+
+
+def test_stacked_fan_accepts_sequence_data_axes():
+    """data_axes given as a list must not break the parallel fan (it feeds
+    a static jit argument, so it is normalized to a tuple at construction)."""
+    rng = np.random.default_rng(14)
+    X = rng.uniform(0, 1, (80, D)).astype(np.float32)
+    Q = jnp.asarray(rng.uniform(0, 1, (3, D)).astype(np.float32))
+    sh = ShardedSketchIndex(CFG, seed=2, index_cfg=IndexConfig(segment_capacity=32),
+                            mesh=make_serving_mesh(1), data_axes=["data"])
+    assert sh.stats()["stage1"] == "parallel"
+    ref = SketchIndex(CFG, seed=2, index_cfg=IndexConfig(segment_capacity=32))
+    ref.ingest(jnp.asarray(X))
+    sh.ingest(jnp.asarray(X))
+    want, got = ref.query(Q, top_k=8), sh.query(Q, top_k=8)
+    np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(got[0]))
+    np.testing.assert_array_equal(want[1], got[1])
+
+
+def test_duplicate_fake_devices_fall_back_to_dispatch():
+    """A duplicate device list can't form a mesh: stage 1 degrades to the
+    dispatch fan and stays bit-identical to the single host."""
+    rng = np.random.default_rng(12)
+    X = rng.uniform(0, 1, (100, D)).astype(np.float32)
+    Q = jnp.asarray(rng.uniform(0, 1, (4, D)).astype(np.float32))
+    icfg = IndexConfig(segment_capacity=32)
+    ref = SketchIndex(CFG, seed=5, index_cfg=icfg)
+    sh = ShardedSketchIndex(CFG, seed=5, index_cfg=icfg,
+                            devices=jax.devices()[:1] * 3)
+    assert sh.stats()["stage1"] == "dispatch"
+    ref.ingest(jnp.asarray(X))
+    sh.ingest(jnp.asarray(X))
+    want, got = ref.query(Q, top_k=9), sh.query(Q, top_k=9)
+    np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(got[0]))
+    np.testing.assert_array_equal(want[1], got[1])
 
 
 def test_sharded_query_excludes_tombstones_any_topk():
@@ -272,7 +344,7 @@ def test_sharded_query_excludes_tombstones_any_topk():
 def test_sharded_stats_and_placement_round_robin():
     sh = ShardedSketchIndex(CFG, seed=1,
                             index_cfg=IndexConfig(segment_capacity=32),
-                            devices=jax.devices() * 3)  # fake 3 shards on CPU
+                            devices=jax.devices()[:1] * 3)  # fake 3 shards
     rng = np.random.default_rng(6)
     sh.ingest(jnp.asarray(rng.uniform(0, 1, (200, D)).astype(np.float32)))
     s = sh.stats()
@@ -288,27 +360,51 @@ _MULTIDEV_CHILD = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import tempfile
+    import jax.numpy as jnp
+    import numpy as np
     import test_conformance as tc
-    from repro.index import ShardedSketchIndex
+    from repro.index import IndexConfig, ShardedSketchIndex, SketchIndex
     from repro.launch.mesh import make_serving_mesh
 
     mesh = make_serving_mesh(4)
     assert mesh.shape["data"] == 4
 
     def make(cfg, icfg):
-        return ShardedSketchIndex(cfg, seed=7, index_cfg=icfg, mesh=mesh)
+        sh = ShardedSketchIndex(cfg, seed=7, index_cfg=icfg, mesh=mesh)
+        assert sh.stats()["stage1"] == "parallel"
+        return sh
 
     with tempfile.TemporaryDirectory() as tmp:
         tc._interleaved_lifecycle(make, tmp)
+
+    # shards holding only padded stacked blocks: one sealed segment on a
+    # 4-shard mesh leaves three shards pure padding; tombstone most of the
+    # corpus and over-ask top_k — no shape crash, answers still match
+    rng = np.random.default_rng(5)
+    X = rng.uniform(0, 1, (80, tc.D)).astype(np.float32)
+    Q = jnp.asarray(rng.uniform(0, 1, (3, tc.D)).astype(np.float32))
+    icfg = IndexConfig(segment_capacity=64)
+    ref = SketchIndex(tc.CFG, seed=9, index_cfg=icfg)
+    sh = ShardedSketchIndex(tc.CFG, seed=9, index_cfg=icfg, mesh=mesh)
+    assert sh.stats()["stage1"] == "parallel"
+    ids_r = ref.ingest(jnp.asarray(X)); ids_s = sh.ingest(jnp.asarray(X))
+    ref.delete(ids_r[:70]); sh.delete(ids_s[:70])
+    d0, i0 = ref.query(Q, top_k=50)
+    d1, i1 = sh.query(Q, top_k=50)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(i0, i1)
+    assert d1.shape[1] == sh.n_live == 10
     print("SHARDED_4DEV_OK")
     """
 )
 
 
+@pytest.mark.slow
 def test_sharded_lifecycle_multidevice_subprocess():
     """The same acceptance sequence on a real 1x4 CPU mesh (forced host
     devices live in a child process, per the launch-only device-count
-    rule)."""
+    rule), plus the padded-shard edge (a shard with no real rows).  Runs
+    nightly with the rest of the ``slow`` suite."""
     env = dict(os.environ)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.pathsep.join(

@@ -409,3 +409,93 @@ def test_micro_batcher_flush_survives_errors(rng):
     assert isinstance(errors[0], ValueError)
     d_ref, i_ref = index.query(jnp.asarray(X[1:2]), top_k=2)
     np.testing.assert_array_equal(results[1][1], i_ref)
+
+
+def test_top_k_validation_is_friendly(rng):
+    """Malformed top_k fails with a contract error naming top_k, never a
+    shape crash deep in the strip fan; over-asking is NOT an error."""
+    X = np.asarray(rows_of(rng, 40))
+    index = make_index(capacity=16)
+    index.ingest(jnp.asarray(X))
+    Q = jnp.asarray(X[:2])
+    with pytest.raises(ValueError, match="top_k"):
+        index.query(Q, top_k=-1)
+    with pytest.raises(ValueError, match="top_k"):
+        index.query(Q, top_k=2.5)
+    d, ids = index.query(Q, top_k=0)  # explicit empty ask stays empty
+    assert d.shape == (2, 0) and ids.shape == (2, 0)
+    d, ids = index.query(Q, top_k=10_000)  # over-ask truncates to live
+    assert d.shape == (2, 40) and ids.shape == (2, 40)
+
+
+def test_micro_batcher_rejects_bad_top_k_without_poisoning(rng):
+    """A caller's bad top_k raises before it joins a batch, so concurrent
+    well-formed requests in other groups are unaffected."""
+    X = np.asarray(rows_of(rng, 30))
+    index = make_index(capacity=30)
+    index.ingest(jnp.asarray(X))
+    mb = MicroBatcher(index, max_batch=4, max_wait_ms=50.0)
+    with pytest.raises(ValueError, match="top_k"):
+        mb.query(X[0], top_k=-3)
+    assert not mb._groups  # nothing enqueued
+    d, ids = mb.query(X[0], top_k=5)
+    d_ref, i_ref = index.query(jnp.asarray(X[:1]), top_k=5)
+    np.testing.assert_array_equal(ids, i_ref)
+
+
+def test_micro_batcher_over_ask_on_padded_sharded_index(rng):
+    """MicroBatcher over a sharded index whose only corpus is a heavily
+    tombstoned (padding-heavy after compaction) segment set: top_k beyond
+    the live count returns min(top_k, live) columns from every path."""
+    from repro.index import ShardedSketchIndex
+    from repro.launch.mesh import make_serving_mesh
+
+    X = np.asarray(rows_of(rng, 60))
+    sh = ShardedSketchIndex(CFG, seed=7,
+                            index_cfg=IndexConfig(segment_capacity=16),
+                            mesh=make_serving_mesh(1))
+    ids = sh.ingest(jnp.asarray(X))
+    sh.delete(ids[:55])
+    sh.compact(min_live_frac=0.9)  # padded stacked blocks everywhere
+    mb = MicroBatcher(sh, max_batch=4, max_wait_ms=20.0)
+    d, got = mb.query(X[:2], top_k=40)
+    assert d.shape == (2, 5) and got.shape == (2, 5)
+    assert not np.isin(got, ids[:55]).any()
+    d_ref, i_ref = sh.query(jnp.asarray(X[:2]), top_k=40)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d_ref))
+    np.testing.assert_array_equal(got, i_ref)
+
+
+def test_finite_k_clamps_racing_deletes():
+    """A delete racing a query can leave fewer finite candidates than the
+    live-count snapshot promised; the fan clamps instead of surfacing dead
+    rows / sentinel positions (unit check of the shared clamp)."""
+    from repro.index.query import _finite_k
+
+    vals = np.array([[1.0, 2.0, np.inf, np.inf],
+                     [0.5, np.inf, np.inf, np.inf]], np.float32)
+    assert _finite_k(vals, 3) == 1  # worst row has one finite candidate
+    assert _finite_k(vals, 1) == 1
+    assert _finite_k(np.zeros((0, 4), np.float32), 3) == 3  # no query rows
+    full = np.array([[1.0, 2.0], [3.0, 4.0]], np.float32)
+    assert _finite_k(full, 2) == 2  # no clamp when the promise holds
+
+
+def test_sharded_stack_cache_dropped_on_swap(rng):
+    """Compaction swaps must release the stacked stage-1 operands (and the
+    swapped-out segments they pin) immediately, not at the next query."""
+    from repro.index import ShardedSketchIndex
+    from repro.launch.mesh import make_serving_mesh
+
+    X = np.asarray(rows_of(rng, 96))
+    sh = ShardedSketchIndex(CFG, seed=7,
+                            index_cfg=IndexConfig(segment_capacity=32),
+                            mesh=make_serving_mesh(1))
+    ids = sh.ingest(jnp.asarray(X))
+    sh.query(jnp.asarray(X[:2]), top_k=3)  # builds the stack cache
+    assert sh._stack is not None
+    sh.delete(ids[:30])
+    sh.compact(min_live_frac=0.5)
+    assert sh._stack is None  # dropped at the swap, under the lock
+    d, got = sh.query(jnp.asarray(X[:2]), top_k=3)  # rebuilds cleanly
+    assert sh._stack is not None and got.shape == (2, 3)

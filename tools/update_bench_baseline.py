@@ -1,0 +1,111 @@
+"""Refresh ``benchmarks/baseline.json`` for the CI benchmark ratchet.
+
+Runs the exact CI smoke command (tiny shapes, CPU, mesh row enabled) in a
+child process, parses the CSV rows, and rewrites the committed baseline with
+each row's median-wall-time microseconds.  Alternatively convert a CSV
+artifact downloaded from a CI run with ``--from-csv``.
+
+Usage::
+
+    python tools/update_bench_baseline.py            # re-measure locally
+    python tools/update_bench_baseline.py --from-csv bench-smoke.csv
+    python tools/update_bench_baseline.py --tolerance 2.0
+
+Refresh deliberately requires a human commit: CI only ever *reads* the
+baseline, so a slow row must either be fixed or explicitly re-baselined in
+review — the ratchet never loosens itself.
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "benchmarks", "baseline.json")
+SMOKE_ARGS = ["kernels", "scaling", "index_serving", "--mesh"]
+
+
+def parse_csv(lines):
+    rows = {}
+    for line in lines:
+        parts = line.strip().split(",")
+        if len(parts) < 3 or parts[0] == "name":
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.setdefault(parts[0], us)
+    return rows
+
+
+def measure(reps: int):
+    """Per-row max of ``reps`` full smoke runs: the baseline should record
+    the worst a *healthy* build does on this hardware, so run-to-run machine
+    noise lands inside the baseline instead of inside CI failures."""
+    env = dict(os.environ)
+    env["REPRO_BENCH_TINY"] = "1"
+    env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), env.get("PYTHONPATH", "")])
+    cmd = [sys.executable, "-m", "benchmarks.run", *SMOKE_ARGS]
+    rows: dict = {}
+    for i in range(reps):
+        print(f"+ [{i + 1}/{reps}]", " ".join(cmd), file=sys.stderr)
+        out = subprocess.run(cmd, cwd=ROOT, env=env, check=True,
+                             capture_output=True, text=True)
+        sys.stderr.write(out.stdout)
+        for name, us in parse_csv(out.stdout.splitlines()).items():
+            rows[name] = max(rows.get(name, 0.0), us)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--from-csv", metavar="CSV",
+                    help="read rows from an existing smoke CSV instead of "
+                         "re-running the benchmarks")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="allowed slowdown factor before CI fails "
+                         "(default %(default)s — generous, CI runners are "
+                         "noisy shared hardware)")
+    ap.add_argument("--min-delta-us", type=float, default=1000.0,
+                    help="absolute regression floor: a row only fails when "
+                         "it is both tolerance-times slower AND this many "
+                         "us slower, so micro-row jitter never pages "
+                         "(default %(default)s)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="smoke runs to fold (per-row max) into the "
+                         "baseline (default %(default)s)")
+    ap.add_argument("--out", default=BASELINE)
+    args = ap.parse_args()
+
+    if args.from_csv:
+        with open(args.from_csv) as f:
+            rows = parse_csv(f)
+        source = f"csv:{os.path.basename(args.from_csv)}"
+    else:
+        rows = measure(args.reps)
+        source = f"local-rerun-max{args.reps}"
+    if not rows:
+        sys.exit("no benchmark rows found")
+
+    baseline = {
+        "tolerance": args.tolerance,
+        "min_delta_us": args.min_delta_us,
+        "source": source,
+        "command": f"REPRO_BENCH_TINY=1 python -m benchmarks.run "
+                   f"{' '.join(SMOKE_ARGS)}",
+        "rows": {k: round(v, 1) for k, v in sorted(rows.items())},
+    }
+    with open(args.out, "w") as f:
+        json.dump(baseline, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(rows)} rows, tolerance "
+          f"{args.tolerance}x)")
+
+
+if __name__ == "__main__":
+    main()
