@@ -14,6 +14,14 @@ Emits the harness CSV rows (name,us_per_call,derived):
                       pre-sketched query through the sequential-dispatch
                       stage 1, so the row doubles as the parallel-fan
                       speedup readout (gated by the CI baseline check)
+  threshold_parallel  us per pre-sketched sharded threshold query through
+                      the stacked shard_map fan, derived =
+                      p50_ms|dispatch_ms|hits — dispatch_ms is the same
+                      query through the sequential-dispatch scan; pairs are
+                      self-checked identical before timing
+  rebalance           us per skew-healing migration pass (skewed corpus:
+                      heavy deletes on most shards, compact, rebalance),
+                      derived = moved|skew_before|skew_after
 
 REPRO_BENCH_TINY=1 shrinks shapes for the CI smoke job.
 """
@@ -95,7 +103,7 @@ def run():
         )
         for lo in range(0, n, batch):
             sharded.ingest(jnp.asarray(X[lo:lo + batch]))
-        assert sharded.stats()["stage1"] == "parallel"
+        assert sharded.stats()["stage1"]["plain"] == "parallel"
         want = index.query(Q, top_k=top_k)
         got = sharded.query(Q, top_k=top_k)  # warmup + conformance check
         assert np.array_equal(np.asarray(want[0]), np.asarray(got[0]))
@@ -121,9 +129,9 @@ def run():
         disp = sharded_fan_topk(qsk, sharded._segments(), sharded.cfg,
                                 sharded.devices, top_k=top_k,
                                 engine=sharded.engine)  # warmup (dispatch)
-        for d, i in (par, disp):
-            assert np.array_equal(np.asarray(got[0]), np.asarray(d))
-            assert np.array_equal(got[1], i)
+        for dv, iv in (par, disp):
+            assert np.array_equal(np.asarray(got[0]), np.asarray(dv))
+            assert np.array_equal(got[1], iv)
         lat_p, lat_d = [], []
         for _ in range(reps):
             t0 = time.perf_counter()
@@ -139,6 +147,62 @@ def run():
         rows.append(("stage1_parallel", p50p * 1e3,
                      f"p50_ms={p50p:.2f}|dispatch_ms={p50d:.2f}"
                      f"|shards={sharded.n_shards}"))
+
+        # the stacked threshold fan vs the sequential-dispatch scan over the
+        # same segments, pre-sketched (isolates stage 1, like stage1_parallel)
+        from repro.index.sharded import sharded_threshold_scan
+
+        radius = 0.15
+        tp = sharded.query_threshold_sketch(qsk, radius=radius, relative=True)
+        td = sharded_threshold_scan(qsk, sharded._segments(), sharded.cfg,
+                                    sharded.devices, radius=radius,
+                                    relative=True, engine=sharded.engine)
+        assert np.array_equal(tp[0], td[0]) and np.array_equal(tp[1], td[1])
+        lat_p, lat_d = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sharded.query_threshold_sketch(qsk, radius=radius, relative=True)
+            lat_p.append((time.perf_counter() - t0) * 1e3)
+            t0 = time.perf_counter()
+            sharded_threshold_scan(qsk, sharded._segments(), sharded.cfg,
+                                   sharded.devices, radius=radius,
+                                   relative=True, engine=sharded.engine)
+            lat_d.append((time.perf_counter() - t0) * 1e3)
+        p50p = float(np.percentile(np.asarray(lat_p), 50))
+        p50d = float(np.percentile(np.asarray(lat_d), 50))
+        rows.append(("threshold_parallel", p50p * 1e3,
+                     f"p50_ms={p50p:.2f}|dispatch_ms={p50d:.2f}"
+                     f"|hits={len(tp[0])}"))
+
+        # skew-healing migration pass on a 4-shard fleet (planner-level fake
+        # shards so the row runs on the 1-device CI box): tombstone most rows
+        # of every segment off shard 0, compact (delete skew becomes height
+        # skew), then time the rebalance that levels the stacked heights
+        import jax
+
+        n_fake = 4
+        cap_r = max(cap // n_fake, 64)
+        reb = ShardedSketchIndex(
+            SketchConfig(p=4, k=k, block_d=min(1024, d)),
+            index_cfg=IndexConfig(segment_capacity=cap_r),
+            devices=[jax.devices()[0]] * n_fake,
+        )
+        ids = np.concatenate([reb.ingest(jnp.asarray(X[lo:lo + batch]))
+                              for lo in range(0, n, batch)])
+        seg_of = np.arange(n) // cap_r
+        kill = np.flatnonzero(seg_of % n_fake != 0)
+        kill = np.setdiff1d(kill, kill[::16])  # leave survivors to migrate
+        reb.delete(ids[kill])
+        reb.compact(min_live_frac=0.95)
+        skew_before = reb.stats()["shard_skew"]
+        t0 = time.perf_counter()
+        moved = reb.rebalance(skew_trigger=1.2)
+        reb_us = (time.perf_counter() - t0) * 1e6
+        skew_after = reb.stats()["shard_skew"]
+        assert moved > 0 and skew_after < skew_before
+        rows.append(("rebalance", reb_us,
+                     f"moved={moved}|skew_before={skew_before:.2f}"
+                     f"|skew_after={skew_after:.2f}"))
 
     emit(rows)
 

@@ -37,6 +37,7 @@ __all__ = [
     "pairwise_sharded",
     "knn_sharded",
     "stacked_topk_shards",
+    "stacked_threshold_shards",
     "mesh_shard_devices",
 ]
 
@@ -288,6 +289,82 @@ def stacked_topk_shards(
         out_specs=(spec_blk, spec_blk),
         check_vma=False,
     )(Aq, nq, B_stack, nb_stack, mask_stack, pos_stack)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mesh", "relative", "col_block", "backend", "data_axes"),
+)
+def stacked_threshold_shards(
+    Aq: jax.Array,
+    nq: jax.Array,
+    B_stack: jax.Array,
+    nb_stack: jax.Array,
+    mask_stack: jax.Array,
+    radius: jax.Array,
+    *,
+    mesh: Mesh,
+    relative: bool = False,
+    col_block: int,
+    backend: str = "xla",
+    data_axes: Sequence[str] | str = "data",
+):
+    """Stage 1 of a sharded threshold scan as ONE ``shard_map``.
+
+    The threshold sibling of :func:`stacked_topk_shards`: every shard holds
+    an equal-shape block of packed corpus factors placed along ``data_axes``
+    and streams the (replicated) query factors through the engine's scanned
+    masked strip criterion concurrently (``engine.reduce.
+    stacked_threshold_scan`` — compile O(1) in corpus size, ``radius``
+    traced).  Only a per-shard (q, R) bool hit matrix leaves a device —
+    1 byte/pair, never a distance strip — and no collective runs at all; the
+    host owns the hit → (row, position) extraction and the final merge.
+
+    ``mask_stack`` suppresses tombstones and block padding *after* the strip
+    estimate, and the strict float32 ``D < radius`` criterion (relative:
+    ``D < radius * (nq_i + nb_j)`` over the marginal p-norms) is evaluated
+    exactly as the single-host scan evaluates it, so the surviving pairs are
+    pair-for-pair identical.  R must be a multiple of ``col_block``.
+
+    Returns hits (S, q, R) bool, sharded over ``data_axes`` on the leading
+    axis.
+    """
+    from repro.engine.backends import strip_distances
+    from repro.engine.reduce import stacked_threshold_scan
+
+    data_axes = _tuple(data_axes)
+    q = Aq.shape[0]
+    _, R, W = B_stack.shape
+    if R % col_block != 0:
+        raise ValueError(f"stack rows {R} not a multiple of col_block {col_block}")
+    n_strips = R // col_block
+    radius = jnp.asarray(radius, jnp.float32)
+
+    def local_hits(aq, nq_, b, nb_, m, r):
+        b, nb_, m = b[0], nb_[0], m[0]
+
+        def strip_fn(xs):
+            bb, nbb = xs
+            return strip_distances(aq, bb, nq_, nbb, backend=backend, clip=True)
+
+        hits = stacked_threshold_scan(
+            strip_fn,
+            (b.reshape(n_strips, col_block, W), nb_.reshape(n_strips, col_block)),
+            m.reshape(n_strips, col_block),
+            rows=q, radius=r, relative=relative, nq=nq_,
+            nb=nb_.reshape(n_strips, col_block),
+        )
+        return hits[None]
+
+    spec_blk = P(data_axes, None, None)
+    spec_row = P(data_axes, None)
+    return shard_map(
+        local_hits,
+        mesh=mesh,
+        in_specs=(P(None, None), P(None), spec_blk, spec_row, spec_row, P()),
+        out_specs=spec_blk,
+        check_vma=False,
+    )(Aq, nq, B_stack, nb_stack, mask_stack, radius)
 
 
 def knn_sharded(

@@ -24,6 +24,7 @@ __all__ = [
     "streaming_topk",
     "streaming_topk_strips",
     "stacked_topk_scan",
+    "stacked_threshold_scan",
     "merge_topk",
     "rerank_topk",
     "strip_bounds",
@@ -152,6 +153,55 @@ def stacked_topk_scan(
 
     (vals, idx), _ = jax.lax.scan(body, init, (strips, mask, pos))
     return vals, idx
+
+
+def stacked_threshold_scan(
+    strip_fn: Callable,
+    strips,
+    mask: jax.Array,
+    *,
+    rows: int,
+    radius: jax.Array,
+    relative: bool = False,
+    nq: jax.Array = None,
+    nb: jax.Array = None,
+) -> jax.Array:
+    """Masked threshold criterion over uniform stacked strips via ``lax.scan``.
+
+    The stacked sibling of the strip-unrolled threshold loop: ``strips`` is a
+    pytree of (n_strips, col_block, ...) operands, ``strip_fn(strip_slice)``
+    maps one (col_block, ...) slice of each leaf to a (rows, col_block)
+    distance strip, and the scanned body applies the engine's strict
+    ``D < radius`` contract — so one compiled program serves any corpus size,
+    and ``radius`` is traced (changing it never recompiles).
+
+    ``mask`` is (n_strips, col_block): columns with a False mask (tombstones
+    and block padding) can never hit, applied *after* the strip estimate so
+    live values stay bit-identical to the unstacked scan.  With
+    ``relative=True`` the criterion is ``D < radius * (nq_i + nb_j)`` over
+    the marginal p-norms (``nq`` (rows,), ``nb`` (n_strips, col_block) in
+    stack order) — the dedup criterion, same as ``threshold_scan``.
+
+    Returns a (rows, n_strips * col_block) bool hit matrix in stack order;
+    only these bools (1 byte/pair, never a distance) leave the device.
+    """
+    n_strips, col_block = mask.shape
+    if relative and (nq is None or nb is None):
+        raise ValueError("relative=True needs nq and nb marginal norms")
+    xs = (strips, mask, nb) if relative else (strips, mask)
+
+    def body(_, inputs):
+        if relative:
+            strip_slice, m, nb_s = inputs
+            thr = radius * (nq[:, None] + nb_s[None, :])
+        else:
+            strip_slice, m = inputs
+            thr = radius
+        D = strip_fn(strip_slice)
+        return None, (D < thr) & m[None, :]
+
+    _, hits = jax.lax.scan(body, None, xs)  # (n_strips, rows, col_block)
+    return jnp.swapaxes(hits, 0, 1).reshape(rows, n_strips * col_block)
 
 
 def streaming_topk(

@@ -23,7 +23,12 @@ segments off the query path and swaps them in atomically.
 from .query import MicroBatcher, fan_topk, threshold_scan
 from .segment import ActiveSegment, SealedSegment, SketchReservoir
 from .service import CompactionHandle, CompactionPolicy, IndexConfig, SketchIndex
-from .sharded import ShardedSketchIndex, sharded_fan_topk, sharded_threshold_scan
+from .sharded import (
+    RebalancePolicy,
+    ShardedSketchIndex,
+    sharded_fan_topk,
+    sharded_threshold_scan,
+)
 from .store import load_index, save_index
 
 __all__ = [
@@ -32,6 +37,7 @@ __all__ = [
     "IndexConfig",
     "CompactionHandle",
     "CompactionPolicy",
+    "RebalancePolicy",
     "MicroBatcher",
     "ActiveSegment",
     "SealedSegment",

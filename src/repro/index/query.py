@@ -144,13 +144,17 @@ def _segment_threshold_hits(qsk, q_packed, seg: Segment, cfg: SketchConfig,
     strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
     ids = seg.row_ids
     rows_out, ids_out = [], []
+    # the radius comparison is a float32 contract: strips are float32, and the
+    # device-side scans (stacked fan, pairwise_sharded) compare in float32 —
+    # a float64 host comparison would flip ties exactly at the radius
+    r32 = np.float32(radius)
     for c0, c1 in strip_bounds(n, col_block):
         D = np.asarray(strip(c0, c1))
         if relative:
             scale = nq_h[:, None] + nb_h[None, c0:c1]
-            hit = D < radius * scale
+            hit = D < r32 * scale
         else:
-            hit = D < radius
+            hit = D < r32
         rr, cc = np.nonzero(hit)
         rows_out.append(rr)
         ids_out.append(ids[cc + c0])

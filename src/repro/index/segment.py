@@ -20,6 +20,7 @@ K-accumulation order than the GEMM columns every other path uses).
 
 from __future__ import annotations
 
+import itertools
 from functools import partial
 from typing import Optional, Tuple
 
@@ -42,6 +43,17 @@ __all__ = [
 # never present a 1-row segment to the engine: a (n, K) x (K, 1) strip
 # lowers as GEMV, breaking the engine's bit-for-bit contract with dense
 _MIN_SEGMENT_ROWS = 2
+
+# process-monotonic sealed-segment identity.  Cache keys built from ``id()``
+# are unsound: CPython reuses a freed segment's id for the next same-sized
+# allocation, so a snapshot cache keyed on object ids can match stacks built
+# from segments that no longer exist.  ``uid`` never repeats in a process.
+_SEGMENT_UIDS = itertools.count()
+
+# per-segment tombstone delta log length: deltas beyond this fall back to a
+# full mask rebuild (the log exists so steady delete traffic stays an O(batch)
+# device scatter, not so an unbounded history accumulates)
+_TOMBSTONE_LOG_MAX = 64
 
 
 @partial(jax.jit, donate_argnums=(0, 1))
@@ -89,12 +101,17 @@ class SealedSegment:
             raise ValueError(f"row_ids must be ({n},), got {self.row_ids.shape}")
         self.live = (np.ones(n, bool) if live is None
                      else np.asarray(live, bool).copy())
+        self.uid = next(_SEGMENT_UIDS)  # process-monotonic, never reused
         self.shard = None     # placement tag (set by sharded indexes)
         self.live_version = 0  # bumped on every tombstone write (mask caches)
         self._packed = None   # (B, nb) right factors, built lazily per cfg
         self._mask_dev = None
         self._live_count = int(self.live.sum())
         self._live_count_version = 0
+        # (version, local indices) per tombstone write, so device-resident
+        # mask caches can scatter just the flipped rows instead of rebuilding
+        self._tombstone_log: list = []
+        self._log_floor = 0  # versions <= floor are no longer in the log
 
     @property
     def n(self) -> int:
@@ -118,6 +135,23 @@ class SealedSegment:
         self.live[local_idx] = False
         self.live_version += 1
         self._mask_dev = None
+        self._tombstone_log.append(
+            (self.live_version,
+             np.atleast_1d(np.asarray(local_idx, np.int64)).copy()))
+        if len(self._tombstone_log) > _TOMBSTONE_LOG_MAX:
+            dropped_version, _ = self._tombstone_log.pop(0)
+            self._log_floor = dropped_version
+
+    def tombstones_since(self, version: int) -> Optional[np.ndarray]:
+        """Local row indices tombstoned after ``version``, or None when the
+        delta is no longer reconstructible (log trimmed, or the bitmap was
+        rewritten wholesale) and the caller must rebuild its mask."""
+        if version == self.live_version:
+            return np.zeros(0, np.int64)
+        if version < self._log_floor:
+            return None
+        out = [idx for v, idx in self._tombstone_log if v > version]
+        return np.concatenate(out) if out else np.zeros(0, np.int64)
 
     def packed(self, cfg: SketchConfig):
         """(B, nb): cached right factor + marginal norms for plain strips."""

@@ -255,18 +255,29 @@ class SketchIndex:
     # ----------------------------------------------------------------- delete
 
     def delete(self, row_ids) -> int:
-        """Tombstone rows by id; returns how many were live before."""
+        """Tombstone rows by id; returns how many were live before.
+
+        Tombstones are written one ``delete_local`` call per segment per
+        batch (not per row): the sealed segments' tombstone delta log — the
+        thing the sharded index's device-side mask refresh scatters from —
+        records whole batches, so a single large delete stays one log entry
+        instead of overflowing the capped log into full-rebuild fallbacks."""
         with self._lock:
-            removed = 0
+            seen = set()
+            per_seg: Dict[int, List[int]] = {}
             for rid in np.atleast_1d(np.asarray(row_ids, np.int64)):
                 loc = self._loc.get(int(rid))
-                if loc is None:
+                if loc is None or loc in seen:
                     continue
                 seg_idx, local = loc
                 seg = self.active if seg_idx == -1 else self.sealed[seg_idx]
                 if seg.live[local]:
-                    seg.delete_local(local)
-                    removed += 1
+                    seen.add(loc)
+                    per_seg.setdefault(seg_idx, []).append(local)
+            for seg_idx, locals_ in per_seg.items():
+                seg = self.active if seg_idx == -1 else self.sealed[seg_idx]
+                seg.delete_local(np.asarray(locals_, np.int64))
+            removed = len(seen)
         if removed:
             self._maybe_auto_compact()
         return removed
@@ -398,9 +409,11 @@ class SketchIndex:
                     continue
                 newly_dead = seg.row_ids[snap & ~seg.live]
                 if len(newly_dead):
-                    rep.live[np.isin(rep.row_ids, newly_dead)] = False
-                    rep.live_version += 1
-                    rep._mask_dev = None
+                    # replay through delete_local so the replacement's
+                    # tombstone log stays consistent with its live_version
+                    # (device-resident mask caches scatter from that log)
+                    rep.delete_local(
+                        np.flatnonzero(np.isin(rep.row_ids, newly_dead)))
                 out[slot] = rep
             self.sealed = [s for s in out if s is not None]
             self._reindex()

@@ -30,27 +30,37 @@ shard's segments on that same shard and swaps them in under the index
 generation flip; ``load`` re-spreads a stored index over whatever mesh the
 restoring process was launched with via per-segment ``device_put``.
 
-Stage 1 runs in one of two modes:
+Stage 1 runs in one of two modes, for BOTH reduces (top-k and threshold):
 
   parallel (the default whenever a mesh is available)  each shard's sealed
       segments are packed into one equal-shape block — concatenated packed
       factors, zero-padded to a fleet-wide uniform height, padding and
-      tombstones live-masked to +inf — placed along the mesh's ``data`` axis,
+      tombstones live-masked off — placed along the mesh's ``data`` axis,
       and ALL shards fold their strips concurrently inside a single
-      ``shard_map`` (``core.distributed.stacked_topk_shards``); stage-1
-      wall-clock is the slowest shard, not the sum.  Plain packed-matmul
-      strips are bitwise invariant to the re-tiling (the conformance suite's
-      strip-invariance property), so results stay bit-identical.
+      ``shard_map`` (``core.distributed.stacked_topk_shards`` /
+      ``stacked_threshold_shards``); stage-1 wall-clock is the slowest
+      shard, not the sum.  Plain packed-matmul strips are bitwise invariant
+      to the re-tiling (the conformance suite's strip-invariance property),
+      so results stay bit-identical; threshold hits leave a shard as a bool
+      bitmap, never a distance.  Tombstone deltas refresh the stacked live
+      mask device-side (a per-shard scatter of just the flipped rows).
   dispatch (fallback)  the per-segment async-dispatch fan below — used when
       no usable mesh exists (duplicate device lists), and always for the
       ``mle`` estimator, whose per-strip Newton solves are NOT bitwise stable
       under XLA fusion contexts; keeping mle on the exact single-host strip
       programs is what keeps it bit-identical.
+
+Because every shard's stacked block pads to the tallest shard, a skewed
+shard inflates the whole fleet's stage-1 work; ``rebalance()`` (and its
+``RebalancePolicy`` auto-trigger) migrates whole sealed segments between
+shards to level stacked heights — ``device_put`` only, answers unchanged.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple, Union
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +71,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.distributed import (
     _tuple as _axes_tuple,
     mesh_shard_devices,
+    stacked_threshold_shards,
     stacked_topk_shards,
 )
 from repro.core.sketch import LpSketch, SketchConfig
@@ -86,9 +97,49 @@ from .segment import (
 )
 from .service import CompactionPolicy, IndexConfig, SketchIndex
 
-__all__ = ["ShardedSketchIndex", "sharded_fan_topk", "sharded_threshold_scan"]
+__all__ = ["ShardedSketchIndex", "RebalancePolicy", "sharded_fan_topk",
+           "sharded_threshold_scan"]
 
 Segment = Union[ActiveSegment, SealedSegment]
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalancePolicy:
+    """Scheduling policy that drives :meth:`ShardedSketchIndex.rebalance`.
+
+    The stacked stage-1 fan pads every shard's block to the tallest shard's
+    height, so one skewed shard inflates every block in the fleet — the
+    exact failure mode heavy delete traffic (then compaction) on one shard
+    produces.  ``maybe_rebalance()`` (hooked after every delete/ingest batch
+    and after every compaction swap when ``auto`` is set) migrates segments
+    iff
+
+      * the stacked-height skew ``max/mean`` across shards strictly exceeds
+        ``skew_trigger``,
+      * at least ``min_interval_s`` elapsed since the last rebalance pass
+        started (manual ``rebalance()`` calls arm the limiter too), and
+      * migrating actually changes some segment's placement.
+
+    Attributes:
+      skew_trigger: max/mean physical stacked rows per shard above which a
+        migration pass is worth scheduling.
+      min_interval_s: minimum seconds between pass starts — keeps a delete
+        storm from thrashing segments between shards.
+      auto: hook the check into ``delete``/``ingest``/compaction-swap
+        (False = only explicit ``maybe_rebalance()`` calls consult it).
+      clock: monotonic time source (injectable for deterministic tests).
+    """
+
+    skew_trigger: float = 1.5
+    min_interval_s: float = 60.0
+    auto: bool = True
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        if self.skew_trigger < 1.0:
+            raise ValueError("skew_trigger must be >= 1 (max/mean ratio)")
+        if self.min_interval_s < 0:
+            raise ValueError("min_interval_s must be >= 0")
 
 
 def _query_on(dev, qsk: LpSketch, q_packed, estimator: str):
@@ -158,22 +209,31 @@ class _StackedOperands:
     """Device-resident stage-1 operand stacks for one sealed-segment snapshot.
 
     Factors (``B``/``nb``/``pos``) are immutable for a given segment list and
-    rebuild only when the list changes (seal / compaction swap / load) —
-    detected by the identity ``key``.  The live ``mask`` additionally tracks
-    per-segment tombstone versions, so a delete invalidates only the (cheap,
-    bool) mask and never the factor stacks."""
+    rebuild only when the list changes (seal / compaction swap / rebalance /
+    load) — detected by ``key``, built from each segment's process-monotonic
+    ``uid`` (NEVER ``id()``: CPython reuses a freed segment's id, so an id
+    key could match stacks packed from segments that no longer exist).  The
+    live ``mask`` additionally tracks per-segment tombstone versions; a
+    delete refreshes the (cheap, bool) mask in place — a per-shard device
+    scatter of just the flipped rows — and never touches the factor stacks.
+    ``pos_host`` mirrors ``pos`` for the threshold fan's host-side
+    hit → global-position extraction."""
 
     __slots__ = ("key", "groups", "rows", "col_block", "B", "nb", "pos",
-                 "mask", "mask_versions")
+                 "pos_host", "mask", "mask_versions", "mask_full_builds",
+                 "mask_scatter_updates")
 
-    def __init__(self, key, groups, rows, col_block, B, nb, pos):
+    def __init__(self, key, groups, rows, col_block, B, nb, pos, pos_host):
         self.key = key
         self.groups = groups
         self.rows = rows
         self.col_block = col_block
         self.B, self.nb, self.pos = B, nb, pos
+        self.pos_host = pos_host
         self.mask = None
         self.mask_versions = None
+        self.mask_full_builds = 0
+        self.mask_scatter_updates = 0
 
 
 def _build_stacked_operands(shard_groups, n_shards, mesh, devices,
@@ -205,7 +265,7 @@ def _build_stacked_operands(shard_groups, n_shards, mesh, devices,
     nb = jax.make_array_from_single_device_arrays(
         (n_shards, rows), sh_row, parts_nb)
     return _StackedOperands(key, shard_groups, rows, col_block, B, nb,
-                            jax.device_put(pos, sh_row))
+                            jax.device_put(pos, sh_row), pos)
 
 
 def sharded_fan_topk(
@@ -306,7 +366,8 @@ class ShardedSketchIndex(SketchIndex):
                  index_cfg: Optional[IndexConfig] = None,
                  engine: Optional[EngineConfig] = None,
                  mesh=None, devices: Optional[Sequence] = None,
-                 data_axes="data", policy: Optional[CompactionPolicy] = None):
+                 data_axes="data", policy: Optional[CompactionPolicy] = None,
+                 rebalance_policy: Optional[RebalancePolicy] = None):
         if devices is None:
             devices = (mesh_shard_devices(mesh, data_axes)
                        if mesh is not None else jax.devices())
@@ -333,6 +394,10 @@ class ShardedSketchIndex(SketchIndex):
             except (KeyError, ValueError):
                 pass
         self._stack: Optional[_StackedOperands] = None
+        self._last_stage1: Optional[str] = None  # mode of the last query
+        self.rebalance_policy = rebalance_policy
+        self._last_rebalance_start: Optional[float] = None
+        self.auto_rebalances = 0  # policy-triggered passes, for observability
         super().__init__(cfg, seed=seed, index_cfg=index_cfg, engine=engine,
                          policy=policy)
 
@@ -343,13 +408,35 @@ class ShardedSketchIndex(SketchIndex):
     def stats(self) -> dict:
         s = super().stats()
         per_shard = [0] * self.n_shards
-        for seg in self.sealed:
-            if seg.shard is not None:
-                per_shard[seg.shard] += 1
+        rows_per_shard = [0] * self.n_shards
+        with self._lock:
+            for seg in self.sealed:
+                if seg.shard is not None:
+                    per_shard[seg.shard] += 1
+                    rows_per_shard[seg.shard] += seg.n
         s["shards"] = self.n_shards
         s["segments_per_shard"] = per_shard
-        s["stage1"] = "parallel" if self._fan_mesh is not None else "dispatch"
+        s["rows_per_shard"] = rows_per_shard
+        s["shard_skew"] = self._shard_skew(rows_per_shard)
+        # per-estimator: every mle query takes the dispatch fan even when a
+        # stack exists — a single flag here misread mle latency as parallel
+        s["stage1"] = {
+            "plain": "parallel" if self._fan_mesh is not None else "dispatch",
+            "mle": "dispatch",
+            "last": self._last_stage1,
+        }
+        s["auto_rebalances"] = self.auto_rebalances
         return s
+
+    @staticmethod
+    def _shard_skew(rows_per_shard) -> float:
+        """max/mean physical stacked rows across shards (1.0 = balanced;
+        the stacked fan pads every block to the max, so skew is the factor
+        by which one hot shard inflates the whole fleet's stage-1 work)."""
+        total = sum(rows_per_shard)
+        if total == 0:
+            return 1.0
+        return max(rows_per_shard) / (total / len(rows_per_shard))
 
     # ------------------------------------------------------------- placement
 
@@ -378,6 +465,106 @@ class ShardedSketchIndex(SketchIndex):
         seg.shard = shard
         return seg
 
+    # ------------------------------------------------------------ rebalance
+
+    def rebalance(self, *, skew_trigger: Optional[float] = None,
+                  force: bool = False) -> int:
+        """Migrate whole sealed segments between shards to level stacked
+        heights; returns how many segments moved.
+
+        The stacked stage-1 fan pads every shard's block to the tallest
+        shard, so a skewed shard (heavy deletes then compaction, or lopsided
+        restore) inflates every block in the fleet.  When the physical-row
+        skew ``max/mean`` strictly exceeds ``skew_trigger`` (or always, with
+        ``force=True``), segments are re-placed by a greedy bin-pack on live
+        rows — largest segment first onto the currently lightest shard — and
+        moved with ``device_put`` (bits move, estimates are never recomputed,
+        so query results are bit-for-bit unchanged).  The whole pass runs
+        under the index lock like a compaction swap: queries see the old
+        placement or the new one, never a mix, and the stacked operand cache
+        is invalidated exactly once via the generation flip."""
+        if skew_trigger is not None and skew_trigger < 1.0:
+            raise ValueError("skew_trigger must be >= 1 (max/mean ratio)")
+        with self._lock:
+            rows_per_shard = [0] * self.n_shards
+            for seg in self.sealed:
+                rows_per_shard[(seg.shard or 0) % self.n_shards] += seg.n
+            if not force:
+                thr = (skew_trigger if skew_trigger is not None else
+                       (self.rebalance_policy.skew_trigger
+                        if self.rebalance_policy is not None else 1.5))
+                if self._shard_skew(rows_per_shard) <= thr:
+                    return 0
+            # arm the rate limiter only when a pass actually starts: a
+            # declined skew check must never push back the next window
+            self._arm_rebalance_limit()
+            # greedy bin-pack on live rows: largest first, lightest shard
+            # wins; ties resolve by (shard index) then (uid) so the plan is
+            # deterministic for a given segment list
+            order = sorted(self.sealed,
+                           key=lambda g: (-g.live_count, g.uid))
+            load = [0] * self.n_shards
+            plan = {}
+            for seg in order:
+                tgt = min(range(self.n_shards), key=lambda s: (load[s], s))
+                load[tgt] += max(seg.live_count, 1)
+                plan[seg.uid] = tgt
+            # commit only if the plan strictly improves the PHYSICAL height
+            # skew (what pads the stacked blocks): live counts and physical
+            # rows diverge on un-compacted tombstones, and a no-progress
+            # migration would flip the generation — rebuilding every stack —
+            # for nothing, over and over under an auto policy
+            planned_rows = [0] * self.n_shards
+            for seg in self.sealed:
+                planned_rows[plan[seg.uid]] += seg.n
+            if self._shard_skew(planned_rows) >= self._shard_skew(rows_per_shard):
+                return 0
+            moved = 0
+            for seg in self.sealed:
+                tgt = plan[seg.uid]
+                if tgt != seg.shard:
+                    self._place_segment(seg, tgt)
+                    moved += 1
+            if moved:
+                self.generation += 1
+                self._segments_changed()
+            return moved
+
+    def maybe_rebalance(self) -> int:
+        """Consult the :class:`RebalancePolicy` and run one migration pass
+        if it is due; returns segments moved (0 when the policy declines:
+        no policy, skew below trigger, rate limited, or nothing to move)."""
+        pol = self.rebalance_policy
+        if pol is None:
+            return 0
+        now = pol.clock()
+        with self._lock:
+            if (self._last_rebalance_start is not None
+                    and now - self._last_rebalance_start < pol.min_interval_s):
+                return 0
+            moved = self.rebalance(skew_trigger=pol.skew_trigger)
+            if moved:
+                self.auto_rebalances += 1
+        return moved
+
+    def _arm_rebalance_limit(self) -> None:
+        if self.rebalance_policy is not None:
+            self._last_rebalance_start = self.rebalance_policy.clock()
+
+    def _maybe_auto_compact(self) -> None:
+        super()._maybe_auto_compact()
+        if self.rebalance_policy is not None and self.rebalance_policy.auto:
+            self.maybe_rebalance()
+
+    def _swap_compacted(self, built) -> int:
+        # a compaction swap is the moment delete skew becomes *height* skew
+        # (segments shrink to their live rows) — self-heal right after it
+        rewritten = super()._swap_compacted(built)
+        if (rewritten and self.rebalance_policy is not None
+                and self.rebalance_policy.auto):
+            self.maybe_rebalance()
+        return rewritten
+
     # ---------------------------------------------------------------- query
 
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
@@ -387,7 +574,9 @@ class ShardedSketchIndex(SketchIndex):
         if self._fan_mesh is not None and estimator == "plain":
             out = self._stacked_fan_topk(qsk, segments, top_k)
             if out is not None:
+                self._last_stage1 = "parallel"
                 return out
+        self._last_stage1 = "dispatch"
         return sharded_fan_topk(qsk, segments, self.cfg, self.devices,
                                 top_k=top_k, estimator=estimator,
                                 engine=self.engine)
@@ -396,10 +585,15 @@ class ShardedSketchIndex(SketchIndex):
 
     def _stacked_operands(self, shard_groups, col_block: int
                           ) -> _StackedOperands:
-        """Cached stacks for the current sealed snapshot (identity-keyed:
-        any seal / compaction swap / reload changes segment objects)."""
+        """Cached stacks for the current sealed snapshot.
+
+        Keyed on each segment's process-monotonic ``uid`` plus its shard and
+        stack offset: any seal / compaction swap / rebalance / reload changes
+        the key.  ``id()`` must never be the key — after a swap drops old
+        segments, CPython can hand their ids to the replacements, and the
+        stale key would then serve stacks packed from freed segments."""
         key = (col_block,) + tuple(
-            id(seg) for _s, g in shard_groups for _b, seg in g)
+            (s, b, seg.uid) for s, g in shard_groups for b, seg in g)
         st = self._stack
         if st is None or st.key != key:
             st = _build_stacked_operands(
@@ -409,17 +603,69 @@ class ShardedSketchIndex(SketchIndex):
         return st
 
     def _stacked_mask(self, st: _StackedOperands):
-        """(S, rows) device live mask, rebuilt only when tombstones moved."""
+        """(S, rows) device live mask, refreshed only when tombstones moved.
+
+        A tombstone delta is applied *device-side*: each affected shard's
+        resident (1, rows) mask block gets a scatter of just the flipped
+        positions (``seg.tombstones_since``), so a delete costs O(deletes)
+        per shard — never a (S, rows) host rebuild + ``device_put`` of the
+        whole fleet's bitmap.  Falls back to the full host rebuild when the
+        per-segment delta log has been trimmed (or on a fresh snapshot,
+        where no mask exists yet)."""
         versions = tuple(
             seg.live_version for _s, g in st.groups for _b, seg in g)
-        if st.mask is None or st.mask_versions != versions:
-            m = np.zeros((self.n_shards, st.rows), bool)
-            for s, g in st.groups:
-                m[s] = shard_stack_live(g, st.rows)
-            st.mask = jax.device_put(
-                m, NamedSharding(self._fan_mesh, P(self.data_axes, None)))
-            st.mask_versions = versions
+        if st.mask is not None and st.mask_versions == versions:
+            return st.mask
+        if st.mask is not None:
+            flips = self._mask_deltas(st)
+            if flips is not None:
+                if flips:
+                    st.mask = self._scatter_mask(st.mask, flips)
+                    st.mask_scatter_updates += 1
+                st.mask_versions = versions
+                return st.mask
+        m = np.zeros((self.n_shards, st.rows), bool)
+        for s, g in st.groups:
+            m[s] = shard_stack_live(g, st.rows)
+        st.mask = jax.device_put(
+            m, NamedSharding(self._fan_mesh, P(self.data_axes, None)))
+        st.mask_versions = versions
+        st.mask_full_builds += 1
         return st.mask
+
+    def _mask_deltas(self, st: _StackedOperands):
+        """{shard: stacked row indices tombstoned since the cached mask}, or
+        None when some segment's delta is unreconstructible (log trimmed)."""
+        flips: dict = {}
+        it = iter(st.mask_versions)
+        for s, g in st.groups:
+            r0 = 0
+            for _b, seg in g:
+                cached = next(it)
+                if seg.live_version != cached:
+                    idx = seg.tombstones_since(cached)
+                    if idx is None:
+                        return None
+                    if len(idx):
+                        flips.setdefault(s, []).append(r0 + idx)
+                r0 += seg.n
+        return {s: np.concatenate(parts) for s, parts in flips.items()}
+
+    def _scatter_mask(self, mask, flips):
+        """Scatter False at ``flips[shard]`` into each shard's resident mask
+        block on its own device, then restitch the global (S, rows) array —
+        the mask never round-trips through the host."""
+        parts = [None] * self.n_shards
+        devs = [None] * self.n_shards
+        for ash in mask.addressable_shards:
+            s = ash.index[0].start or 0
+            parts[s] = ash.data
+            devs[s] = ash.device
+        for s, idx in flips.items():
+            parts[s] = jax.device_put(
+                parts[s].at[0, idx].set(False), devs[s])
+        return jax.make_array_from_single_device_arrays(
+            (self.n_shards, mask.shape[1]), mask.sharding, parts)
 
     def _stacked_fan_topk(self, qsk: LpSketch, segments, top_k: int):
         """Stage 1 under ``shard_map``: all shards fold their stacked strips
@@ -469,16 +715,71 @@ class ShardedSketchIndex(SketchIndex):
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
                                estimator: str = "plain"):
+        segments = self._segments()
+        if self._fan_mesh is not None and estimator == "plain":
+            out = self._stacked_threshold(qsk, segments, radius, relative)
+            if out is not None:
+                self._last_stage1 = "parallel"
+                return out
+        self._last_stage1 = "dispatch"
         return sharded_threshold_scan(
-            qsk, self._segments(), self.cfg, self.devices, radius=radius,
+            qsk, segments, self.cfg, self.devices, radius=radius,
             relative=relative, estimator=estimator, engine=self.engine)
+
+    def _stacked_threshold(self, qsk: LpSketch, segments, radius: float,
+                           relative: bool):
+        """Threshold stage 1 under ``shard_map``: all shards evaluate the
+        masked strict ``D < radius`` criterion over their stacked blocks
+        concurrently (``core.distributed.stacked_threshold_shards``); only
+        per-shard hit booleans leave the mesh, converted host-side to
+        (query row, global position) pairs and merged with the local group's
+        hits in the same (query, ingest-order) contract as the single-host
+        ``threshold_scan`` — pair-for-pair identical.  The ``mle`` estimator
+        never routes here (its Newton strips are not bitwise stable under
+        XLA fusion), matching the top-k fan's rationale.  Returns None when
+        nothing is sharded yet (the dispatch scan is the scan)."""
+        backend, _, col_block = (self.engine or EngineConfig()).resolve()
+        groups, _ = _group_by_shard(segments, self.n_shards)
+        shard_groups = [(s, g) for s, g in groups if s is not None]
+        if not shard_groups:
+            return None
+        st = self._stacked_operands(shard_groups, col_block)
+        q_packed = _pack_query(qsk, self.cfg, "plain")
+        Aq, nq = q_packed
+        hits_sh = stacked_threshold_shards(
+            Aq, nq, st.B, st.nb, self._stacked_mask(st),
+            jnp.float32(radius), mesh=self._fan_mesh, relative=relative,
+            col_block=col_block, backend=backend, data_axes=self.data_axes)
+        # local (active / unplaced) segments run the exact single-host strip
+        # loop concurrently with the device fan
+        nq_h = np.asarray(qsk.norm_pp(self.cfg.p))
+        rows_out, ids_out = [], []
+        for s, grp in groups:
+            if s is not None:
+                continue
+            for _base, seg in grp:
+                rr, ii = _segment_threshold_hits(
+                    qsk, q_packed, seg, self.cfg, "plain", backend,
+                    col_block, nq_h, radius, relative)
+                rows_out.extend(rr)
+                ids_out.extend(ii)
+        # only the per-shard hit booleans cross the shard boundary
+        hits_np = np.asarray(jax.device_get(hits_sh))
+        for s, _g in shard_groups:
+            rr, cc = np.nonzero(hits_np[s])
+            if len(rr):
+                pos = st.pos_host[s][cc]
+                rows_out.append(rr)
+                ids_out.append(_ids_for_positions(segments, pos))
+        return _merge_threshold_hits(rows_out, ids_out)
 
     # ----------------------------------------------------------- persistence
 
     @classmethod
     def load(cls, path: str, *, engine: Optional[EngineConfig] = None,
              mesh=None, devices: Optional[Sequence] = None,
-             data_axes="data", policy: Optional[CompactionPolicy] = None
+             data_axes="data", policy: Optional[CompactionPolicy] = None,
+             rebalance_policy: Optional[RebalancePolicy] = None
              ) -> "ShardedSketchIndex":
         """Restore with sharding hints: each stored segment is ``device_put``
         onto its shard as it loads (multi-host restore path)."""
@@ -486,6 +787,7 @@ class ShardedSketchIndex(SketchIndex):
         if mesh is None and devices is None:
             devices = jax.devices()
         index = load_index(path, engine=engine, mesh=mesh, devices=devices,
-                           data_axes=data_axes, policy=policy)
+                           data_axes=data_axes, policy=policy,
+                           rebalance_policy=rebalance_policy)
         assert isinstance(index, cls)
         return index

@@ -120,7 +120,7 @@ def save_index(path: str, index: SketchIndex) -> str:
 
 def load_index(path: str, *, engine: Optional[EngineConfig] = None,
                mesh=None, devices=None, data_axes="data",
-               policy=None) -> SketchIndex:
+               policy=None, rebalance_policy=None) -> SketchIndex:
     """Restore an index saved by ``save_index`` onto the current devices.
 
     With ``mesh`` (or an explicit ``devices`` list) the restore comes back as
@@ -139,7 +139,8 @@ def load_index(path: str, *, engine: Optional[EngineConfig] = None,
         from .sharded import ShardedSketchIndex  # local import: sharded imports store
         index: SketchIndex = ShardedSketchIndex(
             cfg, seed=manifest["seed"], index_cfg=icfg, engine=engine,
-            mesh=mesh, devices=devices, data_axes=data_axes, policy=policy)
+            mesh=mesh, devices=devices, data_axes=data_axes, policy=policy,
+            rebalance_policy=rebalance_policy)
     else:
         index = SketchIndex(cfg, seed=manifest["seed"], index_cfg=icfg,
                             engine=engine, policy=policy)

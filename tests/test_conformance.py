@@ -227,6 +227,12 @@ def _interleaved_lifecycle(make_sharded, tmp_path):
     sh.delete(more_s[:25])
     check("after post-compact delete")
 
+    # skew-aware rebalancing: migrating whole sealed segments between shards
+    # moves bits, never recomputes estimates — answers must not change (the
+    # single host has no shards, so the reference is simply unaffected)
+    sh.rebalance(force=True)
+    check("after forced rebalance")
+
     path = os.path.join(str(tmp_path), "sharded_idx")
     sh.save(path)
     sh2 = type(sh).load(path, devices=sh.devices)
@@ -252,7 +258,7 @@ def test_sharded_lifecycle_matches_single_host(tmp_path):
 
     def make(cfg, icfg):
         sh = ShardedSketchIndex(cfg, seed=7, index_cfg=icfg, mesh=mesh)
-        assert sh.stats()["stage1"] == "parallel"
+        assert sh.stats()["stage1"]["plain"] == "parallel"
         return sh
 
     _interleaved_lifecycle(make, tmp_path)
@@ -300,7 +306,7 @@ def test_stacked_fan_accepts_sequence_data_axes():
     Q = jnp.asarray(rng.uniform(0, 1, (3, D)).astype(np.float32))
     sh = ShardedSketchIndex(CFG, seed=2, index_cfg=IndexConfig(segment_capacity=32),
                             mesh=make_serving_mesh(1), data_axes=["data"])
-    assert sh.stats()["stage1"] == "parallel"
+    assert sh.stats()["stage1"]["plain"] == "parallel"
     ref = SketchIndex(CFG, seed=2, index_cfg=IndexConfig(segment_capacity=32))
     ref.ingest(jnp.asarray(X))
     sh.ingest(jnp.asarray(X))
@@ -319,7 +325,7 @@ def test_duplicate_fake_devices_fall_back_to_dispatch():
     ref = SketchIndex(CFG, seed=5, index_cfg=icfg)
     sh = ShardedSketchIndex(CFG, seed=5, index_cfg=icfg,
                             devices=jax.devices()[:1] * 3)
-    assert sh.stats()["stage1"] == "dispatch"
+    assert sh.stats()["stage1"]["plain"] == "dispatch"
     ref.ingest(jnp.asarray(X))
     sh.ingest(jnp.asarray(X))
     want, got = ref.query(Q, top_k=9), sh.query(Q, top_k=9)
@@ -355,6 +361,78 @@ def test_sharded_stats_and_placement_round_robin():
     assert [seg.shard for seg in sh.sealed] == [0, 1, 2, 0, 1, 2]
 
 
+@pytest.mark.parametrize("relative", [False, True], ids=["absolute", "relative"])
+def test_threshold_boundary_conformance(relative):
+    """The strict ``D < radius`` contract with ties exactly AT the radius:
+    pair-for-pair identical hits from the dense engine, the single-host
+    ``threshold_scan``, the dispatch ``sharded_threshold_scan``, and the
+    stacked shard_map fan.  The comparison is float32 on every path — a
+    float64 host comparison would flip the tie the device paths exclude."""
+    from repro.core.sketch import sketch as sketch_rows
+    from repro.index.sharded import sharded_threshold_scan
+
+    rng = np.random.default_rng(21)
+    n = 150
+    X = rng.uniform(0, 1, (n, D)).astype(np.float32)
+    Q = jnp.asarray(rng.uniform(0, 1, (5, D)).astype(np.float32))
+    icfg = IndexConfig(segment_capacity=32)
+    ref = SketchIndex(CFG, seed=13, index_cfg=icfg)
+    sh = ShardedSketchIndex(CFG, seed=13, index_cfg=icfg,
+                            mesh=make_serving_mesh(1))
+    assert sh.stats()["stage1"]["plain"] == "parallel"
+    ids_r = ref.ingest(jnp.asarray(X))
+    ids_s = sh.ingest(jnp.asarray(X))
+    ref.delete(ids_r[20:50])  # tombstones in the mix: masked rows can't tie
+    sh.delete(ids_s[20:50])
+
+    live = np.ones(n, bool)
+    live[20:50] = False
+    live_ids = ids_r[live]
+    qsk = sketch_rows(Q, ref.key, CFG)
+    live_sk = ref.live_sketch()
+    dense = np.asarray(engine.pairwise(qsk, live_sk, CFG, reduce="full"))
+    if relative:
+        # norms are float32, so scale and the threshold product stay float32
+        scale = (np.asarray(qsk.norm_pp(CFG.p))[:, None]
+                 + np.asarray(live_sk.norm_pp(CFG.p))[None, :])
+        # pick a pair whose float32 ratio reproduces its distance exactly, so
+        # D == radius * scale holds bit-for-bit: a real tie AT the boundary
+        ratios = (dense / scale).astype(np.float32)
+        exact = (ratios * scale == dense) & (dense > 0)
+        assert exact.any(), "no exact relative tie constructible for this seed"
+        i, j = map(int, np.argwhere(exact)[0])
+        radius = float(ratios[i, j])
+        want_hit = dense < np.float32(radius) * scale
+        assert dense[i, j] == np.float32(radius) * scale[i, j]
+        assert not want_hit[i, j]  # the tie must be excluded everywhere
+    else:
+        flat = np.sort(dense, axis=None)
+        radius = float(flat[flat.size // 2])  # an exact estimate value
+        want_hit = dense < np.float32(radius)
+        # the pair sitting exactly at the radius must be excluded everywhere
+        assert (dense == np.float32(radius)).any()
+    want_r, want_c = np.nonzero(want_hit)
+    want_ids = live_ids[want_c]
+
+    er, ec = engine.pairwise(qsk, live_sk, CFG, reduce="threshold",
+                             radius=radius, relative=relative)
+    qsk_s = sketch_rows(Q, sh.key, CFG)
+    got = {
+        "dense-engine": (er, live_ids[ec]),
+        "single-host": ref.query_threshold(Q, radius=radius,
+                                           relative=relative),
+        "stacked-fan": sh.query_threshold(Q, radius=radius,
+                                          relative=relative),
+        "dispatch": sharded_threshold_scan(
+            qsk_s, sh._segments(), sh.cfg, sh.devices, radius=radius,
+            relative=relative, engine=sh.engine),
+    }
+    assert sh.stats()["stage1"]["last"] == "parallel"
+    for tag, (rr, ii) in got.items():
+        np.testing.assert_array_equal(rr, want_r, err_msg=tag)
+        np.testing.assert_array_equal(ii, want_ids, err_msg=tag)
+
+
 _MULTIDEV_CHILD = textwrap.dedent(
     """
     import os
@@ -371,7 +449,7 @@ _MULTIDEV_CHILD = textwrap.dedent(
 
     def make(cfg, icfg):
         sh = ShardedSketchIndex(cfg, seed=7, index_cfg=icfg, mesh=mesh)
-        assert sh.stats()["stage1"] == "parallel"
+        assert sh.stats()["stage1"]["plain"] == "parallel"
         return sh
 
     with tempfile.TemporaryDirectory() as tmp:
@@ -386,7 +464,7 @@ _MULTIDEV_CHILD = textwrap.dedent(
     icfg = IndexConfig(segment_capacity=64)
     ref = SketchIndex(tc.CFG, seed=9, index_cfg=icfg)
     sh = ShardedSketchIndex(tc.CFG, seed=9, index_cfg=icfg, mesh=mesh)
-    assert sh.stats()["stage1"] == "parallel"
+    assert sh.stats()["stage1"]["plain"] == "parallel"
     ids_r = ref.ingest(jnp.asarray(X)); ids_s = sh.ingest(jnp.asarray(X))
     ref.delete(ids_r[:70]); sh.delete(ids_s[:70])
     d0, i0 = ref.query(Q, top_k=50)
@@ -395,6 +473,46 @@ _MULTIDEV_CHILD = textwrap.dedent(
     np.testing.assert_array_equal(i0, i1)
     assert d1.shape[1] == sh.n_live == 10
     print("SHARDED_4DEV_OK")
+
+    # real multi-device rebalancing: skew one shard of the 4-wide mesh with
+    # heavy deletes + compaction, migrate segments across physical devices,
+    # and stay bit-identical (top-k AND the stacked threshold fan) while the
+    # device-side mask refresh keeps scattering into the migrated stacks
+    rng = np.random.default_rng(23)
+    X = rng.uniform(0, 1, (512, tc.D)).astype(np.float32)
+    Q = jnp.asarray(rng.uniform(0, 1, (5, tc.D)).astype(np.float32))
+    icfg = IndexConfig(segment_capacity=64)
+    ref = SketchIndex(tc.CFG, seed=11, index_cfg=icfg)
+    sh = ShardedSketchIndex(tc.CFG, seed=11, index_cfg=icfg, mesh=mesh)
+    ids_r = ref.ingest(jnp.asarray(X)); ids_s = sh.ingest(jnp.asarray(X))
+
+    def check(tag):
+        d0, i0 = ref.query(Q, top_k=13); d1, i1 = sh.query(Q, top_k=13)
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1), err_msg=tag)
+        np.testing.assert_array_equal(i0, i1, err_msg=tag)
+        r0, c0 = ref.query_threshold(Q, radius=0.12, relative=True)
+        r1, c1 = sh.query_threshold(Q, radius=0.12, relative=True)
+        np.testing.assert_array_equal(r0, r1, err_msg=tag)
+        np.testing.assert_array_equal(c0, c1, err_msg=tag)
+
+    check("4dev ingest")
+    kill = np.concatenate([np.arange(64, 256), np.arange(320, 512)])
+    kill = np.setdiff1d(kill, kill[::16])
+    ref.delete(ids_r[kill]); sh.delete(ids_s[kill])
+    check("4dev heavy delete (device-side mask refresh)")
+    st = sh._stack
+    assert st is not None and st.mask_scatter_updates >= 1
+    ref.compact(min_live_frac=0.9); sh.compact(min_live_frac=0.9)
+    check("4dev post-compact")
+    skew_before = sh.stats()["shard_skew"]
+    assert skew_before > 1.3
+    moved = sh.rebalance(skew_trigger=1.3)
+    assert moved > 0
+    assert sh.stats()["shard_skew"] < skew_before
+    check("4dev post-rebalance")
+    ref.delete(ids_r[:5]); sh.delete(ids_s[:5])
+    check("4dev post-rebalance delete")
+    print("SHARDED_4DEV_REBALANCE_OK")
     """
 )
 
@@ -403,8 +521,10 @@ _MULTIDEV_CHILD = textwrap.dedent(
 def test_sharded_lifecycle_multidevice_subprocess():
     """The same acceptance sequence on a real 1x4 CPU mesh (forced host
     devices live in a child process, per the launch-only device-count
-    rule), plus the padded-shard edge (a shard with no real rows).  Runs
-    nightly with the rest of the ``slow`` suite."""
+    rule), plus the padded-shard edge (a shard with no real rows) and the
+    multi-device rebalancing lifecycle (skew → migrate across physical
+    devices → bit-identical answers).  Runs nightly with the ``slow``
+    suite."""
     env = dict(os.environ)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.pathsep.join(
@@ -416,3 +536,4 @@ def test_sharded_lifecycle_multidevice_subprocess():
     )
     assert res.returncode == 0, res.stdout + res.stderr
     assert "SHARDED_4DEV_OK" in res.stdout
+    assert "SHARDED_4DEV_REBALANCE_OK" in res.stdout

@@ -300,6 +300,46 @@ def test_one_row_save_load_bit_for_bit(rng, tmp_path):
     np.testing.assert_array_equal(i0, i1)
 
 
+def test_empty_index_save_load_round_trip(rng, tmp_path):
+    """An index whose active segment has 0 written rows — fresh, or drained
+    by deletes — must save → load → query to identical (empty) results on
+    both index classes, not shape-error through the trimmed-segment /
+    ``_pad_rows`` / ``_MIN_SEGMENT_ROWS`` path."""
+    import jax
+
+    from repro.index import ShardedSketchIndex
+
+    Q = rows_of(rng, 3)
+
+    # 0 rows ever written: no segment files at all in the save
+    fresh = make_index(capacity=10)
+    fresh.save(str(tmp_path / "fresh"))
+    for loaded in (SketchIndex.load(str(tmp_path / "fresh")),
+                   ShardedSketchIndex.load(str(tmp_path / "fresh"),
+                                           devices=jax.devices())):
+        d, ids = loaded.query(Q, top_k=5)
+        assert d.shape == (3, 0) and ids.shape == (3, 0)
+        qr, qi = loaded.query_threshold(Q, radius=0.5)
+        assert qr.size == 0 and qi.size == 0
+        # the restored index keeps serving
+        rid = loaded.ingest(rows_of(rng, 2))
+        _, ids = loaded.query(Q, top_k=5)
+        assert set(ids.ravel()) == set(rid)
+
+    # rows written then all tombstoned: live bitmaps all-False round-trip
+    drained = make_index(capacity=10)
+    rid = drained.ingest(rows_of(rng, 25))
+    drained.delete(rid)
+    drained.save(str(tmp_path / "drained"))
+    loaded = SketchIndex.load(str(tmp_path / "drained"))
+    assert loaded.n_live == 0
+    assert loaded.next_row_id == drained.next_row_id
+    d, ids = loaded.query(Q, top_k=5)
+    assert d.shape == (3, 0) and ids.shape == (3, 0)
+    qr, qi = loaded.query_threshold(Q, radius=0.5)
+    assert qr.size == 0 and qi.size == 0
+
+
 def test_micro_batcher_empty_batch_returns_early(rng):
     """A 0-row query batch answers immediately with empty shapes — it must
     not join a batch or push a degenerate 0-row strip through the engine."""
