@@ -47,13 +47,25 @@ def mc_estimates(x, y, cfg: SketchConfig, n_mc: int, seed0: int = 0, mle=False):
 # every emitted row, across all modules a driver run imports — the baseline
 # regression check (benchmarks/run.py --check-baseline) reads this instead of
 # re-parsing stdout.  QUIET suppresses the CSV print (the check's warm second
-# pass measures without polluting the artifact).
+# pass measures without polluting the artifact).  ROW_METRICS captures the
+# serving-stack metrics registry as of each row's emit — the driver writes it
+# into the bench-metrics.json artifact so a latency row can be read next to
+# the counters (stage-1 mode, cache hits, mask scatters) that produced it.
 ALL_ROWS: list = []
+ROW_METRICS: dict = {}
 QUIET = False
 
 
 def emit(rows):
     ALL_ROWS.extend(rows)
+    try:
+        from repro.obs.metrics import REGISTRY
+
+        snap = REGISTRY.snapshot()
+        for name, _us, _derived in rows:
+            ROW_METRICS.setdefault(name, snap)
+    except Exception:
+        pass  # metrics are an artifact garnish, never a bench failure
     if not QUIET:
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

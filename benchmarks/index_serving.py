@@ -19,6 +19,11 @@ Emits the harness CSV rows (name,us_per_call,derived):
                       p50_ms|dispatch_ms|hits — dispatch_ms is the same
                       query through the sequential-dispatch scan; pairs are
                       self-checked identical before timing
+  obs_overhead        us per pre-sketched query with span tracing ENABLED,
+                      derived = ratio|off_us — ratio is enabled/disabled on
+                      interleaved min-of-reps and is asserted <= 1.10 inside
+                      this module (hardware-independent), so the CI smoke
+                      fails if the observability layer stops being ~free
   rebalance           us per skew-healing migration pass (skewed corpus:
                       heavy deletes on most shards, compact, rebalance),
                       derived = moved|skew_before|skew_after
@@ -90,6 +95,41 @@ def run():
         ("index_query_mb", per_row_us,
          f"rows_per_s={1e6 / max(per_row_us, 1e-9):.0f}"),
     ]
+
+    # tracing-enabled vs disabled over the same pre-sketched query: the
+    # observability layer must be ~free.  Each rep times the two modes
+    # back-to-back and the gate takes the MIN of the per-pair ratios: a
+    # noisy rep inflates both sides of its own pair (common-mode, cancels),
+    # while a real systematic overhead shows up in EVERY pair — so the min
+    # stays high only when tracing genuinely costs.  The ratio (unlike the
+    # absolute row) is hardware-independent, so it is asserted HERE, in the
+    # module, not just gated by the baseline numbers.
+    from repro import obs
+    from repro.core.sketch import sketch as sketch_rows
+
+    qsk = sketch_rows(Q, index.key, index.cfg)
+    index.query_sketch(qsk, top_k=top_k)  # warm the jit caches
+    t_off, t_on = [], []
+    try:
+        for _ in range(12 if TINY else 20):
+            t0 = time.perf_counter()
+            index.query_sketch(qsk, top_k=top_k)
+            t_off.append(time.perf_counter() - t0)
+            obs.enable()
+            t0 = time.perf_counter()
+            index.query_sketch(qsk, top_k=top_k)
+            t_on.append(time.perf_counter() - t0)
+            obs.disable()
+    finally:
+        obs.disable()
+    us_off, us_on = min(t_off) * 1e6, min(t_on) * 1e6
+    ratio = min(on / off for on, off in zip(t_on, t_off))
+    assert ratio <= 1.10, (
+        f"tracing-enabled query is >= {ratio:.3f}x the disabled path in "
+        f"every interleaved pair ({us_on:.0f}us vs {us_off:.0f}us at best): "
+        f"the obs layer must stay ~free")
+    rows.append(("obs_overhead", us_on,
+                 f"ratio={ratio:.3f}|off_us={us_off:.0f}"))
 
     if _mesh_enabled():
         # sharded smoke: same corpus spread over the 1xN serving mesh via

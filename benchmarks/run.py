@@ -10,6 +10,12 @@ noisy) and the process exits non-zero if any gated row got slower or went
 missing.  A markdown comparison report is written next to the CSV (path via
 ``REPRO_BENCH_REPORT``, default ``bench-baseline-report.md``) for CI to
 upload.  Refresh the baseline with ``tools/update_bench_baseline.py``.
+
+Every run also writes a metrics artifact (path via ``REPRO_BENCH_METRICS``,
+default ``bench-metrics.json``): the emitted rows plus the serving-stack
+metrics-registry snapshot as of each row's emit, so a latency number can be
+read next to the counters (stage-1 mode, stacked-cache hits, mask scatters)
+that produced it.
 """
 
 import importlib
@@ -121,6 +127,30 @@ def check_baseline(rows, baseline_path=BASELINE_PATH, report_path=None):
     return not hard, lines
 
 
+def _write_metrics_artifact(path=None) -> None:
+    """Dump the cold-pass rows + per-row metrics snapshots for CI upload.
+
+    Best-effort by design: the artifact is observability for the bench run,
+    and a failure to garnish must never mask the measurements themselves."""
+    from benchmarks import common
+
+    if path is None:
+        path = os.environ.get("REPRO_BENCH_METRICS", "bench-metrics.json")
+    try:
+        from repro.obs.metrics import REGISTRY
+
+        payload = {
+            "rows": [{"name": n, "us_per_call": float(us), "derived": d}
+                     for n, us, d in common.ALL_ROWS],
+            "per_row_metrics": common.ROW_METRICS,
+            "final_metrics": REGISTRY.snapshot(),
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True, default=str)
+    except Exception:
+        traceback.print_exc()
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     failed = []
@@ -144,6 +174,7 @@ def main() -> None:
         except Exception:
             failed.append(mod)
             traceback.print_exc()
+    _write_metrics_artifact()
     if failed:
         print(f"FAILED_MODULES={failed}", file=sys.stderr)
         sys.exit(1)

@@ -271,13 +271,17 @@ def stacked_topk_shards(
             bb, nbb = xs
             return strip_distances(aq, bb, nq_, nbb, backend=backend, clip=True)
 
-        vals, pos = stacked_topk_scan(
-            strip_fn,
-            (b.reshape(n_strips, col_block, W), nb_.reshape(n_strips, col_block)),
-            m.reshape(n_strips, col_block),
-            p.reshape(n_strips, col_block),
-            rows=q, top_k=k,
-        )
+        # trace-time annotation only: names this region in jax.profiler /
+        # TensorBoard captures, zero runtime cost
+        with jax.named_scope("stage1.stacked_topk"):
+            vals, pos = stacked_topk_scan(
+                strip_fn,
+                (b.reshape(n_strips, col_block, W),
+                 nb_.reshape(n_strips, col_block)),
+                m.reshape(n_strips, col_block),
+                p.reshape(n_strips, col_block),
+                rows=q, top_k=k,
+            )
         return vals[None], pos[None]
 
     spec_blk = P(data_axes, None, None)
@@ -347,13 +351,17 @@ def stacked_threshold_shards(
             bb, nbb = xs
             return strip_distances(aq, bb, nq_, nbb, backend=backend, clip=True)
 
-        hits = stacked_threshold_scan(
-            strip_fn,
-            (b.reshape(n_strips, col_block, W), nb_.reshape(n_strips, col_block)),
-            m.reshape(n_strips, col_block),
-            rows=q, radius=r, relative=relative, nq=nq_,
-            nb=nb_.reshape(n_strips, col_block),
-        )
+        # trace-time annotation only: names this region in jax.profiler /
+        # TensorBoard captures, zero runtime cost
+        with jax.named_scope("stage1.stacked_threshold"):
+            hits = stacked_threshold_scan(
+                strip_fn,
+                (b.reshape(n_strips, col_block, W),
+                 nb_.reshape(n_strips, col_block)),
+                m.reshape(n_strips, col_block),
+                rows=q, radius=r, relative=relative, nq=nq_,
+                nb=nb_.reshape(n_strips, col_block),
+            )
         return hits[None]
 
     spec_blk = P(data_axes, None, None)

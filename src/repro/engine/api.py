@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.pairwise import pack_sketch, pairwise_margin_mle
 from repro.core.sketch import LpSketch, SketchConfig
 
@@ -115,40 +116,50 @@ def pairwise(
             )
 
     if reduce == "topk":
-        vals, idx = [], []
-        for r0, r1 in strip_bounds(n, row_block):
-            v, i = streaming_topk_strips(
-                lambda c0, c1, r0=r0, r1=r1: strip(r0, r1, c0, c1),
-                r1 - r0, m, top_k=top_k, col_block=col_block,
-            )
-            vals.append(v)
-            idx.append(i)
-        return jnp.concatenate(vals, axis=0), jnp.concatenate(idx, axis=0)
+        with obs.span("engine.pairwise", reduce="topk",
+                      estimator=estimator, n=n, m=m):
+            vals, idx = [], []
+            for r0, r1 in strip_bounds(n, row_block):
+                v, i = streaming_topk_strips(
+                    lambda c0, c1, r0=r0, r1=r1: strip(r0, r1, c0, c1),
+                    r1 - r0, m, top_k=top_k, col_block=col_block,
+                )
+                vals.append(v)
+                idx.append(i)
+            return (jnp.concatenate(vals, axis=0),
+                    jnp.concatenate(idx, axis=0))
 
     if reduce == "threshold":
-        na_h, nb_h = np.asarray(na), np.asarray(nb)
-        rows_out, cols_out = [], []
-        for r0, r1 in strip_bounds(n, row_block):
-            for c0, c1 in strip_bounds(m, col_block):
-                D = np.asarray(strip(r0, r1, c0, c1))
-                if relative:
-                    scale = na_h[r0:r1, None] + nb_h[None, c0:c1]
-                    mask = D < radius * scale
-                else:
-                    mask = D < radius
-                rr, cc = np.nonzero(mask)
-                rows_out.append(rr + r0)
-                cols_out.append(cc + c0)
-        rows = np.concatenate(rows_out) if rows_out else np.zeros(0, np.intp)
-        cols = np.concatenate(cols_out) if cols_out else np.zeros(0, np.intp)
-        order = np.lexsort((cols, rows))  # row-major, == np.nonzero on dense
-        return rows[order], cols[order]
+        with obs.span("engine.pairwise", reduce="threshold",
+                      estimator=estimator, n=n, m=m):
+            na_h, nb_h = np.asarray(na), np.asarray(nb)
+            rows_out, cols_out = [], []
+            for r0, r1 in strip_bounds(n, row_block):
+                for c0, c1 in strip_bounds(m, col_block):
+                    D = np.asarray(strip(r0, r1, c0, c1))
+                    if relative:
+                        scale = na_h[r0:r1, None] + nb_h[None, c0:c1]
+                        mask = D < radius * scale
+                    else:
+                        mask = D < radius
+                    rr, cc = np.nonzero(mask)
+                    rows_out.append(rr + r0)
+                    cols_out.append(cc + c0)
+            rows = (np.concatenate(rows_out) if rows_out
+                    else np.zeros(0, np.intp))
+            cols = (np.concatenate(cols_out) if cols_out
+                    else np.zeros(0, np.intp))
+            # row-major, == np.nonzero on dense
+            order = np.lexsort((cols, rows))
+            return rows[order], cols[order]
 
     # reduce == "full": legacy dense output, assembled strip-by-strip on host
-    out = np.empty((n, m), np.float32)
-    for r0, r1 in strip_bounds(n, row_block):
-        for c0, c1 in strip_bounds(m, col_block):
-            out[r0:r1, c0:c1] = np.asarray(strip(r0, r1, c0, c1))
-    if zero_diag and self_pairs:
-        np.fill_diagonal(out, 0.0)
-    return out
+    with obs.span("engine.pairwise", reduce="full",
+                  estimator=estimator, n=n, m=m):
+        out = np.empty((n, m), np.float32)
+        for r0, r1 in strip_bounds(n, row_block):
+            for c0, c1 in strip_bounds(m, col_block):
+                out[r0:r1, c0:c1] = np.asarray(strip(r0, r1, c0, c1))
+        if zero_diag and self_pairs:
+            np.fill_diagonal(out, 0.0)
+        return out

@@ -28,14 +28,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.pairwise import pack_sketch, pairwise_margin_mle
 from repro.core.sketch import LpSketch, SketchConfig
 from repro.engine import EngineConfig, strip_distances
 from repro.engine.reduce import merge_topk, strip_bounds
+from repro.obs.metrics import REGISTRY
 
 from .segment import ActiveSegment, SealedSegment
 
 __all__ = ["fan_topk", "threshold_scan", "MicroBatcher"]
+
+# fleet-wide batcher counters (always live — they ARE the serving stats);
+# resolved once at import so the flush path never takes the registry lock
+_BATCHES_TOTAL = REGISTRY.counter(
+    "batcher.batches", "micro-batches flushed, all batchers")
+_ROWS_TOTAL = REGISTRY.counter(
+    "batcher.rows", "query rows served through micro-batches")
+# batch-size buckets are row counts, not latencies
+_BATCH_ROWS_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0,
+                       512.0, 1024.0)
 
 _IDX_SENTINEL = np.iinfo(np.int32).max
 
@@ -124,11 +136,14 @@ def _fold_segment_topk(vals, idx, qsk, q_packed, seg: Segment,
     n = _segment_rows(seg)
     strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
     c = min(k, n)
-    for c0, c1 in strip_bounds(n, col_block):
-        D = strip(c0, c1)
-        neg, j = jax.lax.top_k(-D, min(c, c1 - c0))
-        cand_idx = (j + (base + c0)).astype(jnp.int32)
-        vals, idx = merge_topk(vals, idx, -neg, cand_idx, k)
+    # spans here time the host-side strip loop: jax dispatch is async, so
+    # device compute lands in whichever span later blocks on the result
+    with obs.span("engine.strips", rows=n, base=base):
+        for c0, c1 in strip_bounds(n, col_block):
+            D = strip(c0, c1)
+            neg, j = jax.lax.top_k(-D, min(c, c1 - c0))
+            cand_idx = (j + (base + c0)).astype(jnp.int32)
+            vals, idx = merge_topk(vals, idx, -neg, cand_idx, k)
     return vals, idx
 
 
@@ -202,17 +217,19 @@ def fan_topk(
     base = 0
     id_map: List[np.ndarray] = []
     q_packed = _pack_query(qsk, cfg, estimator)
-    for seg in segments:
-        n = _segment_rows(seg)
-        vals, idx = _fold_segment_topk(vals, idx, qsk, q_packed, seg, cfg,
-                                       estimator, backend, col_block,
-                                       base, k_run)
-        id_map.append(seg.row_ids[:n])
-        base += n
+    with obs.span("index.fan.stage1", mode="single",
+                  segments=len(segments)):
+        for seg in segments:
+            n = _segment_rows(seg)
+            vals, idx = _fold_segment_topk(vals, idx, qsk, q_packed, seg, cfg,
+                                           estimator, backend, col_block,
+                                           base, k_run)
+            id_map.append(seg.row_ids[:n])
+            base += n
 
-    pos_to_id = np.concatenate(id_map) if id_map else np.zeros(0, np.int64)
-    k_out = _finite_k(np.asarray(vals), k_out)
-    pos = np.asarray(idx[:, :k_out])
+        pos_to_id = np.concatenate(id_map) if id_map else np.zeros(0, np.int64)
+        k_out = _finite_k(np.asarray(vals), k_out)
+        pos = np.asarray(idx[:, :k_out])
     return vals[:, :k_out], pos_to_id[pos]
 
 
@@ -256,8 +273,35 @@ class MicroBatcher:
         self.max_wait = max_wait_ms / 1e3
         self._lock = threading.Lock()
         self._groups: dict = {}  # (top_k, estimator) -> _Batch
-        self.batches_run = 0
-        self.rows_served = 0
+        # atomic instruments, NOT bare ints: the flush path runs on whichever
+        # caller claims the batch, so two flushes can finish concurrently and
+        # a read-modify-write outside the batch lock would drop counts
+        self._batches = obs.Counter("batches_run")
+        self._rows = obs.Counter("rows_served")
+
+    @property
+    def batches_run(self) -> int:
+        return self._batches.value
+
+    @property
+    def rows_served(self) -> int:
+        return self._rows.value
+
+    def stats(self) -> dict:
+        """Serving counters + (when tracing has run) latency/shape summaries
+        from the process-global registry."""
+        with self._lock:
+            open_groups = len(self._groups)
+        return {
+            "batches_run": self.batches_run,
+            "rows_served": self.rows_served,
+            "open_groups": open_groups,
+            "queue_wait_ms": REGISTRY.histogram(
+                "batcher.queue_wait_ms").summary(),
+            "batch_rows": REGISTRY.histogram(
+                "batcher.batch_rows", buckets=_BATCH_ROWS_BUCKETS).summary(),
+            "flush_ms": REGISTRY.histogram("batcher.flush_ms").summary(),
+        }
 
     class _Batch:
         def __init__(self):
@@ -266,6 +310,7 @@ class MicroBatcher:
             self.done = threading.Event()
             self.results = None
             self.error: Optional[BaseException] = None
+            self.t_open = obs.trace.clock()  # for the queue-wait histogram
 
     def query(self, rows, top_k: int = 10, estimator: str = "plain"):
         """(distances (b, k), row_ids (b, k)) for this caller's rows, with
@@ -312,11 +357,26 @@ class MicroBatcher:
         top_k, estimator = key
         try:
             X = np.concatenate(batch.rows, axis=0)
-            batch.results = self.index.query(X, top_k=top_k,
-                                             estimator=estimator)
-            with self._lock:
-                self.batches_run += 1
-                self.rows_served += X.shape[0]
+            n = X.shape[0]
+            if obs.enabled():
+                REGISTRY.histogram(
+                    "batcher.queue_wait_ms",
+                    "ms a batch waited open before its flush started",
+                ).observe((obs.trace.clock() - batch.t_open) * 1e3)
+                REGISTRY.histogram(
+                    "batcher.batch_rows", "rows coalesced per flushed batch",
+                    buckets=_BATCH_ROWS_BUCKETS).observe(n)
+            # the flusher's trace carries the whole coalesced batch — the
+            # engine ran once, so that is the honest accounting; the index's
+            # own index.query span nests under this root
+            with obs.span("batcher.query", metric="batcher.flush_ms",
+                          rows=n, top_k=top_k, estimator=estimator):
+                batch.results = self.index.query(X, top_k=top_k,
+                                                 estimator=estimator)
+            self._batches.inc()
+            self._rows.inc(n)
+            _BATCHES_TOTAL.inc()
+            _ROWS_TOTAL.inc(n)
         except BaseException as e:  # propagate to every waiter, never hang
             batch.error = e
             raise

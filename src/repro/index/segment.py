@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.pairwise import pack_sketch
 from repro.core.sketch import LpSketch, SketchConfig
+from repro.obs.metrics import REGISTRY
 
 __all__ = [
     "ActiveSegment",
@@ -54,6 +55,14 @@ _SEGMENT_UIDS = itertools.count()
 # full mask rebuild (the log exists so steady delete traffic stays an O(batch)
 # device scatter, not so an unbounded history accumulates)
 _TOMBSTONE_LOG_MAX = 64
+
+# trims are the event that downgrades the sharded index's O(deletes) device
+# mask scatter to a full host rebuild; counting them tells an operator when
+# delete batches are outrunning the delta log
+_LOG_TRIMS = REGISTRY.counter(
+    "segment.tombstone_log_trims",
+    "tombstone delta-log entries dropped (forces a full mask rebuild on the "
+    "next stacked-mask refresh)")
 
 
 @partial(jax.jit, donate_argnums=(0, 1))
@@ -141,6 +150,7 @@ class SealedSegment:
         if len(self._tombstone_log) > _TOMBSTONE_LOG_MAX:
             dropped_version, _ = self._tombstone_log.pop(0)
             self._log_floor = dropped_version
+            _LOG_TRIMS.inc()
 
     def tombstones_since(self, version: int) -> Optional[np.ndarray]:
         """Local row indices tombstoned after ``version``, or None when the

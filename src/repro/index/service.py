@@ -22,11 +22,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.sketch import LpSketch, SketchConfig, sketch
 from repro.engine import EngineConfig
+from repro.obs.metrics import REGISTRY
+from repro.obs.slowlog import GLOBAL_SLOW_LOG
 
 from .query import fan_topk, threshold_scan
 from .segment import ActiveSegment, SealedSegment
+
+# process-global maintenance counters, resolved once at import (the
+# histograms these sit beside fill from spans only while tracing is on;
+# counters are always live — they are the serving stats)
+_COMPACT_PASSES = REGISTRY.counter(
+    "index.compaction_passes", "compaction passes that reached the swap")
+_COMPACT_SEGMENTS = REGISTRY.counter(
+    "index.compaction_segments_rewritten", "segments rewritten by compaction")
+_COMPACT_REPLAYED = REGISTRY.counter(
+    "index.compaction_replayed_deletes",
+    "tombstones replayed onto replacements at swap time")
 
 __all__ = ["IndexConfig", "CompactionPolicy", "SketchIndex", "CompactionHandle"]
 
@@ -171,6 +185,18 @@ class SketchIndex:
             "generation": self.generation,
             "compacting": bool(self._compaction and not self._compaction.done),
             "auto_compactions": self.auto_compactions,
+            # latency histograms fill from trace spans (obs.enable()); the
+            # registry is process-global, so with several indexes in one
+            # process these aggregate across them
+            "latency": {
+                "query_ms": REGISTRY.histogram("index.query_ms").summary(),
+                "threshold_ms": REGISTRY.histogram(
+                    "index.threshold_ms").summary(),
+                "compact_ms": REGISTRY.histogram("index.compact_ms").summary(),
+                "rebalance_ms": REGISTRY.histogram(
+                    "index.rebalance_ms").summary(),
+            },
+            "slow_queries": GLOBAL_SLOW_LOG.entries(),
         }
 
     def _segments(self) -> Sequence[Union[ActiveSegment, SealedSegment]]:
@@ -318,11 +344,16 @@ class SketchIndex:
 
         Blocking variant: builds and swaps inline.  ``compact_async`` runs
         the same plan/build/swap off the query path."""
-        self._arm_rate_limit()
-        plan = self._compaction_plan(min_live_frac)
-        built = [(seg, snap, self._build_replacement(seg, snap))
-                 for seg, snap in plan]
-        return self._swap_compacted(built)
+        with obs.span("index.compact", metric="index.compact_ms",
+                      mode="blocking") as sp:
+            self._arm_rate_limit()
+            plan = self._compaction_plan(min_live_frac)
+            built = [(seg, snap, self._build_replacement(seg, snap))
+                     for seg, snap in plan]
+            rewritten = self._swap_compacted(built)
+            if sp:
+                sp.set(planned=len(plan), rewritten=rewritten)
+            return rewritten
 
     def compact_async(self, min_live_frac: Optional[float] = None
                       ) -> CompactionHandle:
@@ -346,9 +377,15 @@ class SketchIndex:
 
             def work():
                 try:
-                    built = [(seg, snap, self._build_replacement(seg, snap))
-                             for seg, snap in plan]  # device work, no lock held
-                    handle._result = self._swap_compacted(built)
+                    with obs.span("index.compact", metric="index.compact_ms",
+                                  mode="async") as sp:
+                        built = [(seg, snap,
+                                  self._build_replacement(seg, snap))
+                                 for seg, snap in plan]  # device work, no lock
+                        handle._result = self._swap_compacted(built)
+                        if sp:
+                            sp.set(planned=len(plan),
+                                   rewritten=handle._result)
                 except BaseException as e:  # surfaced on join()
                     handle._error = e
                 finally:
@@ -399,6 +436,7 @@ class SketchIndex:
             slot_of = {id(seg): i for i, seg in enumerate(self.sealed)}
             out: List[Optional[SealedSegment]] = list(self.sealed)
             rewritten = 0
+            replayed = 0
             for seg, snap, rep in built:
                 slot = slot_of.get(id(seg))
                 if slot is None:
@@ -414,11 +452,16 @@ class SketchIndex:
                     # (device-resident mask caches scatter from that log)
                     rep.delete_local(
                         np.flatnonzero(np.isin(rep.row_ids, newly_dead)))
+                    replayed += len(newly_dead)
                 out[slot] = rep
             self.sealed = [s for s in out if s is not None]
             self._reindex()
             self.generation += 1
             self._segments_changed()
+            _COMPACT_PASSES.inc()
+            _COMPACT_SEGMENTS.inc(rewritten)
+            if replayed:
+                _COMPACT_REPLAYED.inc(replayed)
             return rewritten
 
     def _reindex(self) -> None:
@@ -447,8 +490,11 @@ class SketchIndex:
 
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
                      estimator: str = "plain"):
-        return fan_topk(qsk, self._segments(), self.cfg,
-                        top_k=top_k, estimator=estimator, engine=self.engine)
+        with obs.span("index.query", metric="index.query_ms", kind="topk",
+                      top_k=top_k, estimator=estimator, rows=qsk.n):
+            return fan_topk(qsk, self._segments(), self.cfg,
+                            top_k=top_k, estimator=estimator,
+                            engine=self.engine)
 
     def query_threshold(self, rows: jax.Array, radius: float, *,
                         relative: bool = False, estimator: str = "plain"):
@@ -461,9 +507,11 @@ class SketchIndex:
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
                                estimator: str = "plain"):
-        return threshold_scan(qsk, self._segments(), self.cfg, radius=radius,
-                              relative=relative, estimator=estimator,
-                              engine=self.engine)
+        with obs.span("index.query", metric="index.threshold_ms",
+                      kind="threshold", estimator=estimator, rows=qsk.n):
+            return threshold_scan(qsk, self._segments(), self.cfg,
+                                  radius=radius, relative=relative,
+                                  estimator=estimator, engine=self.engine)
 
     # ------------------------------------------------------------ persistence
 

@@ -68,6 +68,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core.distributed import (
     _tuple as _axes_tuple,
     mesh_shard_devices,
@@ -77,6 +78,7 @@ from repro.core.distributed import (
 from repro.core.sketch import LpSketch, SketchConfig
 from repro.engine import EngineConfig
 from repro.engine.reduce import rerank_topk
+from repro.obs.metrics import REGISTRY
 
 from .query import (
     _IDX_SENTINEL,
@@ -101,6 +103,34 @@ __all__ = ["ShardedSketchIndex", "RebalancePolicy", "sharded_fan_topk",
            "sharded_threshold_scan"]
 
 Segment = Union[ActiveSegment, SealedSegment]
+
+# process-global serving/maintenance counters, resolved once at import so
+# the per-query hot path never takes the registry lock.  Counters are always
+# live; spans/histograms cost nothing until obs.enable().
+_STAGE1_PARALLEL = REGISTRY.counter(
+    "index.stage1_parallel", "stage-1 fans served by the stacked shard_map")
+_STAGE1_DISPATCH = REGISTRY.counter(
+    "index.stage1_dispatch", "stage-1 fans served by the dispatch fallback")
+_STACK_HITS = REGISTRY.counter(
+    "index.stack_cache_hits", "stacked-operand cache hits")
+_STACK_MISSES = REGISTRY.counter(
+    "index.stack_cache_misses", "stacked-operand cache (re)builds")
+_MASK_SCATTERS = REGISTRY.counter(
+    "index.mask_scatter_updates",
+    "device-side tombstone-delta scatters into resident masks")
+_MASK_REBUILDS = REGISTRY.counter(
+    "index.mask_full_builds",
+    "full host live-mask rebuilds (fresh stack or trimmed delta log)")
+_REBALANCE_PLANS = REGISTRY.counter(
+    "index.rebalance_plans", "rebalance passes that computed a plan")
+_REBALANCE_COMMITS = REGISTRY.counter(
+    "index.rebalance_commits", "rebalance passes that moved >= 1 segment")
+_REBALANCE_DECLINES = REGISTRY.counter(
+    "index.rebalance_declines",
+    "rebalance passes declined (skew below trigger, no-progress plan, or a "
+    "pass already in flight)")
+_REBALANCE_MOVED = REGISTRY.counter(
+    "index.rebalance_segments_moved", "segments migrated between shards")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -299,20 +329,26 @@ def sharded_fan_topk(
     # dispatch every shard's stage-1 work before gathering any of it: jax
     # dispatch is async, so the shards compute concurrently and stage-1
     # wall-clock is the slowest shard, not the sum
-    pending = []
-    for shard, group in groups:
-        dev = devices[shard] if shard is not None else None
-        qs, qp = _query_on(dev, qsk, q_packed, estimator)
-        pending.append(_shard_candidates(qs, qp, group, cfg, estimator,
-                                         backend, col_block, top_k, q))
+    with obs.span("index.fan.stage1", mode="dispatch", shards=len(groups)):
+        pending = []
+        for shard, group in groups:
+            dev = devices[shard] if shard is not None else None
+            with obs.span("index.fan.shard", shard=shard,
+                          segments=len(group)):
+                qs, qp = _query_on(dev, qsk, q_packed, estimator)
+                pending.append(_shard_candidates(qs, qp, group, cfg,
+                                                 estimator, backend,
+                                                 col_block, top_k, q))
 
-    # only the (q, k) candidate lists cross the shard boundary
-    all_vals = [np.asarray(jax.device_get(v)) for v, _ in pending]
-    all_idx = [np.asarray(jax.device_get(i)) for _, i in pending]
-    cat_vals = np.concatenate(all_vals, axis=1)
-    k_out = _finite_k(cat_vals, k_out)
-    vals, idx = rerank_topk(cat_vals, np.concatenate(all_idx, axis=1), k_out)
-    return vals, _ids_for_positions(segments, np.asarray(idx))
+        # only the (q, k) candidate lists cross the shard boundary
+        all_vals = [np.asarray(jax.device_get(v)) for v, _ in pending]
+        all_idx = [np.asarray(jax.device_get(i)) for _, i in pending]
+    with obs.span("index.fan.stage2"):
+        cat_vals = np.concatenate(all_vals, axis=1)
+        k_out = _finite_k(cat_vals, k_out)
+        vals, idx = rerank_topk(cat_vals, np.concatenate(all_idx, axis=1),
+                                k_out)
+        return vals, _ids_for_positions(segments, np.asarray(idx))
 
 
 def sharded_threshold_scan(
@@ -337,16 +373,21 @@ def sharded_threshold_scan(
     nq_h = np.asarray(qsk.norm_pp(cfg.p))
 
     rows_out, ids_out = [], []
-    for shard, group in groups:
-        dev = devices[shard] if shard is not None else None
-        qs, qp = _query_on(dev, qsk, q_packed, estimator)
-        for _base, seg in group:
-            rr, ii = _segment_threshold_hits(qs, qp, seg, cfg, estimator,
-                                             backend, col_block, nq_h,
-                                             radius, relative)
-            rows_out.extend(rr)
-            ids_out.extend(ii)
-    return _merge_threshold_hits(rows_out, ids_out)
+    with obs.span("index.fan.stage1", mode="dispatch", shards=len(groups)):
+        for shard, group in groups:
+            dev = devices[shard] if shard is not None else None
+            with obs.span("index.fan.shard", shard=shard,
+                          segments=len(group)):
+                qs, qp = _query_on(dev, qsk, q_packed, estimator)
+                for _base, seg in group:
+                    rr, ii = _segment_threshold_hits(qs, qp, seg, cfg,
+                                                     estimator, backend,
+                                                     col_block, nq_h,
+                                                     radius, relative)
+                    rows_out.extend(rr)
+                    ids_out.extend(ii)
+    with obs.span("index.fan.stage2"):
+        return _merge_threshold_hits(rows_out, ids_out)
 
 
 class ShardedSketchIndex(SketchIndex):
@@ -397,6 +438,7 @@ class ShardedSketchIndex(SketchIndex):
         self._last_stage1: Optional[str] = None  # mode of the last query
         self.rebalance_policy = rebalance_policy
         self._last_rebalance_start: Optional[float] = None
+        self._rebalance_active = False  # one transfer pass at a time
         self.auto_rebalances = 0  # policy-triggered passes, for observability
         super().__init__(cfg, seed=seed, index_cfg=index_cfg, engine=engine,
                          policy=policy)
@@ -479,56 +521,114 @@ class ShardedSketchIndex(SketchIndex):
         ``force=True``), segments are re-placed by a greedy bin-pack on live
         rows — largest segment first onto the currently lightest shard — and
         moved with ``device_put`` (bits move, estimates are never recomputed,
-        so query results are bit-for-bit unchanged).  The whole pass runs
-        under the index lock like a compaction swap: queries see the old
-        placement or the new one, never a mix, and the stacked operand cache
-        is invalidated exactly once via the generation flip."""
+        so query results are bit-for-bit unchanged).
+
+        The pass runs compact_async-style, copy-then-flip: the plan and the
+        move list are snapshotted under the index lock, the ``device_put``
+        transfers run with the lock RELEASED (sealed sketches are immutable,
+        and ``_rebalance_active`` excludes a second concurrent pass — the
+        only other writer of a sealed segment's device buffers), then the
+        new placements flip in atomically under the lock with one generation
+        bump.  Queries keep serving the old placement during the transfers
+        and see old or new, never a mix; segments compacted away
+        mid-transfer are detected by uid at commit and skipped."""
         if skew_trigger is not None and skew_trigger < 1.0:
             raise ValueError("skew_trigger must be >= 1 (max/mean ratio)")
-        with self._lock:
-            rows_per_shard = [0] * self.n_shards
-            for seg in self.sealed:
-                rows_per_shard[(seg.shard or 0) % self.n_shards] += seg.n
-            if not force:
-                thr = (skew_trigger if skew_trigger is not None else
-                       (self.rebalance_policy.skew_trigger
-                        if self.rebalance_policy is not None else 1.5))
-                if self._shard_skew(rows_per_shard) <= thr:
+        with obs.span("index.rebalance",
+                      metric="index.rebalance_ms") as sp:
+            with self._lock:
+                if self._rebalance_active:
+                    _REBALANCE_DECLINES.inc()
+                    return 0  # a pass is already transferring
+                rows_per_shard = [0] * self.n_shards
+                for seg in self.sealed:
+                    rows_per_shard[(seg.shard or 0) % self.n_shards] += seg.n
+                if not force:
+                    thr = (skew_trigger if skew_trigger is not None else
+                           (self.rebalance_policy.skew_trigger
+                            if self.rebalance_policy is not None else 1.5))
+                    if self._shard_skew(rows_per_shard) <= thr:
+                        _REBALANCE_DECLINES.inc()
+                        return 0
+                # arm the rate limiter only when a pass actually starts: a
+                # declined skew check must never push back the next window
+                self._arm_rebalance_limit()
+                _REBALANCE_PLANS.inc()
+                # greedy bin-pack on live rows: largest first, lightest
+                # shard wins; ties resolve by (shard index) then (uid) so
+                # the plan is deterministic for a given segment list
+                order = sorted(self.sealed,
+                               key=lambda g: (-g.live_count, g.uid))
+                load = [0] * self.n_shards
+                plan = {}
+                for seg in order:
+                    tgt = min(range(self.n_shards),
+                              key=lambda s: (load[s], s))
+                    load[tgt] += max(seg.live_count, 1)
+                    plan[seg.uid] = tgt
+                # commit only if the plan strictly improves the PHYSICAL
+                # height skew (what pads the stacked blocks): live counts
+                # and physical rows diverge on un-compacted tombstones, and
+                # a no-progress migration would flip the generation —
+                # rebuilding every stack — for nothing, over and over under
+                # an auto policy
+                planned_rows = [0] * self.n_shards
+                for seg in self.sealed:
+                    planned_rows[plan[seg.uid]] += seg.n
+                if (self._shard_skew(planned_rows)
+                        >= self._shard_skew(rows_per_shard)):
+                    _REBALANCE_DECLINES.inc()
                     return 0
-            # arm the rate limiter only when a pass actually starts: a
-            # declined skew check must never push back the next window
-            self._arm_rebalance_limit()
-            # greedy bin-pack on live rows: largest first, lightest shard
-            # wins; ties resolve by (shard index) then (uid) so the plan is
-            # deterministic for a given segment list
-            order = sorted(self.sealed,
-                           key=lambda g: (-g.live_count, g.uid))
-            load = [0] * self.n_shards
-            plan = {}
-            for seg in order:
-                tgt = min(range(self.n_shards), key=lambda s: (load[s], s))
-                load[tgt] += max(seg.live_count, 1)
-                plan[seg.uid] = tgt
-            # commit only if the plan strictly improves the PHYSICAL height
-            # skew (what pads the stacked blocks): live counts and physical
-            # rows diverge on un-compacted tombstones, and a no-progress
-            # migration would flip the generation — rebuilding every stack —
-            # for nothing, over and over under an auto policy
-            planned_rows = [0] * self.n_shards
-            for seg in self.sealed:
-                planned_rows[plan[seg.uid]] += seg.n
-            if self._shard_skew(planned_rows) >= self._shard_skew(rows_per_shard):
-                return 0
-            moved = 0
-            for seg in self.sealed:
-                tgt = plan[seg.uid]
-                if tgt != seg.shard:
-                    self._place_segment(seg, tgt)
-                    moved += 1
-            if moved:
-                self.generation += 1
-                self._segments_changed()
+                moves = [(seg, plan[seg.uid]) for seg in self.sealed
+                         if plan[seg.uid] != seg.shard]
+                if not moves:
+                    _REBALANCE_DECLINES.inc()
+                    return 0
+                self._rebalance_active = True
+            try:
+                # device transfers OFF the lock: queries fan over the old
+                # placement while the copies stream
+                with obs.span("index.rebalance.transfer",
+                              segments=len(moves)):
+                    staged = [(seg, tgt, self._transfer_sketch(seg, tgt))
+                              for seg, tgt in moves]
+                with self._lock:
+                    with obs.span("index.rebalance.commit") as csp:
+                        live = {seg.uid for seg in self.sealed}
+                        moved = 0
+                        for seg, tgt, sk in staged:
+                            if seg.uid not in live:
+                                continue  # compacted away mid-transfer
+                            seg.sketch = sk
+                            seg._packed = None
+                            seg._mask_dev = None
+                            seg.shard = tgt
+                            moved += 1
+                        if moved:
+                            self.generation += 1
+                            self._segments_changed()
+                            _REBALANCE_COMMITS.inc()
+                            _REBALANCE_MOVED.inc(moved)
+                        if csp:
+                            csp.set(moved=moved, skipped=len(staged) - moved)
+            finally:
+                with self._lock:
+                    self._rebalance_active = False
+            if sp:
+                sp.set(planned=len(moves), moved=moved)
             return moved
+
+    def _transfer_sketch(self, seg: SealedSegment, shard: int) -> LpSketch:
+        """Copy one sealed segment's sketch onto its target shard's device.
+
+        Runs WITHOUT the index lock (sealed sketches are immutable; the
+        ``_rebalance_active`` flag excludes the only other writer).  Blocks
+        until the copy lands so the locked commit is a pure pointer flip."""
+        dev = self.devices[shard % self.n_shards]
+        sk = LpSketch(U=jax.device_put(seg.sketch.U, dev),
+                      moments=jax.device_put(seg.sketch.moments, dev))
+        jax.block_until_ready((sk.U, sk.moments))
+        return sk
 
     def maybe_rebalance(self) -> int:
         """Consult the :class:`RebalancePolicy` and run one migration pass
@@ -542,8 +642,12 @@ class ShardedSketchIndex(SketchIndex):
             if (self._last_rebalance_start is not None
                     and now - self._last_rebalance_start < pol.min_interval_s):
                 return 0
-            moved = self.rebalance(skew_trigger=pol.skew_trigger)
-            if moved:
+        # the pass itself runs outside our lock hold: rebalance() stages its
+        # device transfers lock-free and only flips placements under the
+        # lock, so holding it here would serialize queries behind the copies
+        moved = self.rebalance(skew_trigger=pol.skew_trigger)
+        if moved:
+            with self._lock:
                 self.auto_rebalances += 1
         return moved
 
@@ -570,16 +674,24 @@ class ShardedSketchIndex(SketchIndex):
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
                      estimator: str = "plain"):
         _check_top_k(top_k)
-        segments = self._segments()
-        if self._fan_mesh is not None and estimator == "plain":
-            out = self._stacked_fan_topk(qsk, segments, top_k)
-            if out is not None:
-                self._last_stage1 = "parallel"
-                return out
-        self._last_stage1 = "dispatch"
-        return sharded_fan_topk(qsk, segments, self.cfg, self.devices,
-                                top_k=top_k, estimator=estimator,
-                                engine=self.engine)
+        with obs.span("index.query", metric="index.query_ms", kind="topk",
+                      top_k=top_k, estimator=estimator, rows=qsk.n) as sp:
+            segments = self._segments()
+            if self._fan_mesh is not None and estimator == "plain":
+                out = self._stacked_fan_topk(qsk, segments, top_k)
+                if out is not None:
+                    self._last_stage1 = "parallel"
+                    _STAGE1_PARALLEL.inc()
+                    if sp:
+                        sp.set(stage1="parallel")
+                    return out
+            self._last_stage1 = "dispatch"
+            _STAGE1_DISPATCH.inc()
+            if sp:
+                sp.set(stage1="dispatch")
+            return sharded_fan_topk(qsk, segments, self.cfg, self.devices,
+                                    top_k=top_k, estimator=estimator,
+                                    engine=self.engine)
 
     # ------------------------------------------------- parallel stage-1 fan
 
@@ -596,10 +708,13 @@ class ShardedSketchIndex(SketchIndex):
             (s, b, seg.uid) for s, g in shard_groups for b, seg in g)
         st = self._stack
         if st is None or st.key != key:
+            _STACK_MISSES.inc()
             st = _build_stacked_operands(
                 shard_groups, self.n_shards, self._fan_mesh, self.devices,
                 self.cfg, col_block, self.data_axes, key)
             self._stack = st
+        else:
+            _STACK_HITS.inc()
         return st
 
     def _stacked_mask(self, st: _StackedOperands):
@@ -622,6 +737,7 @@ class ShardedSketchIndex(SketchIndex):
                 if flips:
                     st.mask = self._scatter_mask(st.mask, flips)
                     st.mask_scatter_updates += 1
+                    _MASK_SCATTERS.inc()
                 st.mask_versions = versions
                 return st.mask
         m = np.zeros((self.n_shards, st.rows), bool)
@@ -631,6 +747,7 @@ class ShardedSketchIndex(SketchIndex):
             m, NamedSharding(self._fan_mesh, P(self.data_axes, None)))
         st.mask_versions = versions
         st.mask_full_builds += 1
+        _MASK_REBUILDS.inc()
         return st.mask
 
     def _mask_deltas(self, st: _StackedOperands):
@@ -683,48 +800,65 @@ class ShardedSketchIndex(SketchIndex):
         if k_out == 0:
             return (jnp.zeros((q, 0), jnp.float32), np.zeros((q, 0), np.int64))
 
-        st = self._stacked_operands(shard_groups, col_block)
-        q_packed = _pack_query(qsk, self.cfg, "plain")
-        Aq, nq = q_packed
-        # one shard_map dispatch covers every shard's stage-1 fold ...
-        # clamp the static top_k to the stack height: every k above it
-        # compiles the identical program, so don't mint new cache entries
-        vals_sh, pos_sh = stacked_topk_shards(
-            Aq, nq, st.B, st.nb, self._stacked_mask(st), st.pos,
-            mesh=self._fan_mesh, top_k=min(top_k, st.rows),
-            col_block=col_block, backend=backend, data_axes=self.data_axes)
-        # ... while the host-local group (active segment + any unplaced
-        # sealed block) folds through the same per-segment strips as always
-        local_pending = [
-            _shard_candidates(qsk, q_packed, grp, self.cfg, "plain", backend,
-                              col_block, top_k, q)
-            for s, grp in groups if s is None
-        ]
+        with obs.span("index.fan.stage1", mode="parallel",
+                      shards=len(shard_groups)):
+            st = self._stacked_operands(shard_groups, col_block)
+            q_packed = _pack_query(qsk, self.cfg, "plain")
+            Aq, nq = q_packed
+            # one shard_map dispatch covers every shard's stage-1 fold ...
+            # clamp the static top_k to the stack height: every k above it
+            # compiles the identical program, so don't mint new cache entries
+            vals_sh, pos_sh = stacked_topk_shards(
+                Aq, nq, st.B, st.nb, self._stacked_mask(st), st.pos,
+                mesh=self._fan_mesh, top_k=min(top_k, st.rows),
+                col_block=col_block, backend=backend,
+                data_axes=self.data_axes)
+            # ... while the host-local group (active segment + any unplaced
+            # sealed block) folds through the same per-segment strips as
+            # always
+            local_pending = [
+                _shard_candidates(qsk, q_packed, grp, self.cfg, "plain",
+                                  backend, col_block, top_k, q)
+                for s, grp in groups if s is None
+            ]
 
-        # only the (q, k) candidate lists leave the shards
-        vals_np = np.asarray(jax.device_get(vals_sh))
-        pos_np = np.asarray(jax.device_get(pos_sh))
-        local_vals = [np.asarray(jax.device_get(v)) for v, _ in local_pending]
-        local_pos = [np.asarray(jax.device_get(i)) for _, i in local_pending]
-        cat_vals = np.concatenate(list(vals_np) + local_vals, axis=1)
-        cat_pos = np.concatenate(list(pos_np) + local_pos, axis=1)
-        k_out = _finite_k(cat_vals, k_out)
-        vals, idx = rerank_topk(cat_vals, cat_pos, k_out)
-        return vals, _ids_for_positions(segments, np.asarray(idx))
+            # only the (q, k) candidate lists leave the shards; the
+            # device_get blocks, so the async shard_map compute lands here
+            vals_np = np.asarray(jax.device_get(vals_sh))
+            pos_np = np.asarray(jax.device_get(pos_sh))
+            local_vals = [np.asarray(jax.device_get(v))
+                          for v, _ in local_pending]
+            local_pos = [np.asarray(jax.device_get(i))
+                         for _, i in local_pending]
+        with obs.span("index.fan.stage2"):
+            cat_vals = np.concatenate(list(vals_np) + local_vals, axis=1)
+            cat_pos = np.concatenate(list(pos_np) + local_pos, axis=1)
+            k_out = _finite_k(cat_vals, k_out)
+            vals, idx = rerank_topk(cat_vals, cat_pos, k_out)
+            return vals, _ids_for_positions(segments, np.asarray(idx))
 
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
                                estimator: str = "plain"):
-        segments = self._segments()
-        if self._fan_mesh is not None and estimator == "plain":
-            out = self._stacked_threshold(qsk, segments, radius, relative)
-            if out is not None:
-                self._last_stage1 = "parallel"
-                return out
-        self._last_stage1 = "dispatch"
-        return sharded_threshold_scan(
-            qsk, segments, self.cfg, self.devices, radius=radius,
-            relative=relative, estimator=estimator, engine=self.engine)
+        with obs.span("index.query", metric="index.threshold_ms",
+                      kind="threshold", estimator=estimator,
+                      rows=qsk.n) as sp:
+            segments = self._segments()
+            if self._fan_mesh is not None and estimator == "plain":
+                out = self._stacked_threshold(qsk, segments, radius, relative)
+                if out is not None:
+                    self._last_stage1 = "parallel"
+                    _STAGE1_PARALLEL.inc()
+                    if sp:
+                        sp.set(stage1="parallel")
+                    return out
+            self._last_stage1 = "dispatch"
+            _STAGE1_DISPATCH.inc()
+            if sp:
+                sp.set(stage1="dispatch")
+            return sharded_threshold_scan(
+                qsk, segments, self.cfg, self.devices, radius=radius,
+                relative=relative, estimator=estimator, engine=self.engine)
 
     def _stacked_threshold(self, qsk: LpSketch, segments, radius: float,
                            relative: bool):
@@ -743,35 +877,39 @@ class ShardedSketchIndex(SketchIndex):
         shard_groups = [(s, g) for s, g in groups if s is not None]
         if not shard_groups:
             return None
-        st = self._stacked_operands(shard_groups, col_block)
-        q_packed = _pack_query(qsk, self.cfg, "plain")
-        Aq, nq = q_packed
-        hits_sh = stacked_threshold_shards(
-            Aq, nq, st.B, st.nb, self._stacked_mask(st),
-            jnp.float32(radius), mesh=self._fan_mesh, relative=relative,
-            col_block=col_block, backend=backend, data_axes=self.data_axes)
-        # local (active / unplaced) segments run the exact single-host strip
-        # loop concurrently with the device fan
-        nq_h = np.asarray(qsk.norm_pp(self.cfg.p))
-        rows_out, ids_out = [], []
-        for s, grp in groups:
-            if s is not None:
-                continue
-            for _base, seg in grp:
-                rr, ii = _segment_threshold_hits(
-                    qsk, q_packed, seg, self.cfg, "plain", backend,
-                    col_block, nq_h, radius, relative)
-                rows_out.extend(rr)
-                ids_out.extend(ii)
-        # only the per-shard hit booleans cross the shard boundary
-        hits_np = np.asarray(jax.device_get(hits_sh))
-        for s, _g in shard_groups:
-            rr, cc = np.nonzero(hits_np[s])
-            if len(rr):
-                pos = st.pos_host[s][cc]
-                rows_out.append(rr)
-                ids_out.append(_ids_for_positions(segments, pos))
-        return _merge_threshold_hits(rows_out, ids_out)
+        with obs.span("index.fan.stage1", mode="parallel",
+                      shards=len(shard_groups)):
+            st = self._stacked_operands(shard_groups, col_block)
+            q_packed = _pack_query(qsk, self.cfg, "plain")
+            Aq, nq = q_packed
+            hits_sh = stacked_threshold_shards(
+                Aq, nq, st.B, st.nb, self._stacked_mask(st),
+                jnp.float32(radius), mesh=self._fan_mesh, relative=relative,
+                col_block=col_block, backend=backend,
+                data_axes=self.data_axes)
+            # local (active / unplaced) segments run the exact single-host
+            # strip loop concurrently with the device fan
+            nq_h = np.asarray(qsk.norm_pp(self.cfg.p))
+            rows_out, ids_out = [], []
+            for s, grp in groups:
+                if s is not None:
+                    continue
+                for _base, seg in grp:
+                    rr, ii = _segment_threshold_hits(
+                        qsk, q_packed, seg, self.cfg, "plain", backend,
+                        col_block, nq_h, radius, relative)
+                    rows_out.extend(rr)
+                    ids_out.extend(ii)
+            # only the per-shard hit booleans cross the shard boundary
+            hits_np = np.asarray(jax.device_get(hits_sh))
+        with obs.span("index.fan.stage2"):
+            for s, _g in shard_groups:
+                rr, cc = np.nonzero(hits_np[s])
+                if len(rr):
+                    pos = st.pos_host[s][cc]
+                    rows_out.append(rr)
+                    ids_out.append(_ids_for_positions(segments, pos))
+            return _merge_threshold_hits(rows_out, ids_out)
 
     # ----------------------------------------------------------- persistence
 

@@ -13,6 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.compat import make_mesh
 from repro.configs.base import TrainKnobs, reduced
 from repro.configs.registry import get_config
@@ -32,7 +33,20 @@ def main(argv=None):
     ap.add_argument("--corpus-rows", type=int, default=4096)
     ap.add_argument("--dims", type=int, default=4096)
     ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--trace", action="store_true",
+                    help="enable span tracing + latency histograms; dumps "
+                         "the slow-query log after the KNN run")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose /metrics (Prometheus text) and "
+                         "/metrics.json on this port while serving")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs.enable()
+    if args.metrics_port is not None:
+        server = obs.metrics.serve_http(args.metrics_port)
+        print(f"metrics on http://{server.server_address[0]}"
+              f":{server.server_address[1]}/metrics")
 
     if args.knn:
         from repro.core import SketchConfig
@@ -50,6 +64,11 @@ def main(argv=None):
         print(f"ingest {args.corpus_rows}x{args.dims}: {t1-t0:.2f}s; "
               f"query {args.queries}: {t2-t1:.2f}s; top1 self-recall {hit:.2f}")
         print("nn dists:", [round(float(x), 5) for x in d[:, 0]])
+        if args.trace:
+            dump = obs.GLOBAL_SLOW_LOG.dump()
+            if dump:
+                print("slow queries:")
+                print(dump)
         return
 
     cfg = get_config(args.arch)

@@ -513,6 +513,38 @@ _MULTIDEV_CHILD = textwrap.dedent(
     ref.delete(ids_r[:5]); sh.delete(ids_s[:5])
     check("4dev post-rebalance delete")
     print("SHARDED_4DEV_REBALANCE_OK")
+
+    # serving-stack trace on the real 4-shard mesh: one batched query yields
+    # one complete span tree — batcher -> index.query -> stage1 fan ->
+    # stage2 rerank — every span carrying the SAME trace id, and the
+    # latency histograms fill from the spans
+    from repro import obs
+    from repro.index.query import MicroBatcher
+    obs.enable()
+    roots = []
+    obs.trace.add_sink(roots.append)
+    mb = MicroBatcher(sh, max_batch=8, max_wait_ms=2.0)
+    mb.query(Q[:2], top_k=7)
+    assert sh.rebalance(force=True) == 0  # balanced: declined, still timed
+    obs.disable()
+    [root] = [r for r in roots if r.name == "batcher.query"]
+    iq, = root.find("index.query")
+    s1, = root.find("index.fan.stage1")
+    s2, = root.find("index.fan.stage2")
+    assert iq.attrs["stage1"] == "parallel"
+    assert s1.attrs["mode"] == "parallel" and 1 <= s1.attrs["shards"] <= 4
+    def span_ids(s):
+        out = [s.trace_id]
+        for c in s.children:
+            out.extend(span_ids(c))
+        return out
+    assert root.trace_id > 0 and set(span_ids(root)) == {root.trace_id}
+    assert root.t0 <= iq.t0 <= s1.t0 <= s1.t1 <= s2.t0 <= s2.t1 <= iq.t1
+    st = sh.stats()
+    assert st["latency"]["query_ms"]["count"] >= 1
+    assert st["latency"]["rebalance_ms"]["count"] >= 1
+    assert any(e["name"] == "batcher.query" for e in st["slow_queries"])
+    print("SHARDED_4DEV_TRACE_OK")
     """
 )
 
@@ -537,3 +569,4 @@ def test_sharded_lifecycle_multidevice_subprocess():
     assert res.returncode == 0, res.stdout + res.stderr
     assert "SHARDED_4DEV_OK" in res.stdout
     assert "SHARDED_4DEV_REBALANCE_OK" in res.stdout
+    assert "SHARDED_4DEV_TRACE_OK" in res.stdout

@@ -1,0 +1,304 @@
+"""Observability layer invariants: histogram bucket/percentile math under a
+deterministic clock, span nesting + trace-id propagation, the zero-allocation
+disabled path, slow-log admission order, and the MicroBatcher's atomic
+serving counters under concurrent flushes.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import SketchConfig
+from repro.index import IndexConfig, SketchIndex
+from repro.index.query import MicroBatcher
+from repro.obs.metrics import Counter, Histogram, MetricsRegistry
+from repro.obs.slowlog import SlowQueryLog
+
+CFG = SketchConfig(p=4, k=32, block_d=64)
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts from the disabled default and leaves no sinks."""
+    obs.disable()
+    obs.GLOBAL_SLOW_LOG.clear()
+    yield
+    obs.disable()
+    obs.GLOBAL_SLOW_LOG.clear()
+
+
+# --------------------------------------------------------------- histograms
+
+
+def test_histogram_bucket_placement_and_totals():
+    h = Histogram("t", buckets=(1.0, 2.0, 4.0, 8.0))
+    for v in (0.5, 1.5, 3.0, 10.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4
+    assert s["sum"] == pytest.approx(15.0)
+    assert s["mean"] == pytest.approx(3.75)
+    # cumulative prometheus buckets: le=1 -> 1, le=2 -> 2, le=4 -> 3,
+    # le=8 -> 3, +inf -> 4
+    cum = h.cumulative()
+    assert [c for _le, c in cum] == [1, 2, 3, 3, 4]
+
+
+def test_histogram_percentiles_deterministic():
+    h = Histogram("t", buckets=(1.0, 2.0, 4.0, 8.0))
+    for v in (0.5, 1.5, 3.0, 10.0):
+        h.observe(v)
+    # rank(p50) = ceil(0.5*4) = 2 -> the (1, 2] bucket's upper edge
+    assert h.percentile(50) == pytest.approx(2.0)
+    # p99 -> +inf bucket -> clamps to the observed max, never infinity
+    assert h.percentile(99) == pytest.approx(10.0)
+    assert np.isfinite(h.percentile(100))
+    # single observation: every percentile is that observation
+    h2 = Histogram("t2", buckets=(1.0, 100.0))
+    h2.observe(7.0)
+    for p in (1, 50, 95, 99):
+        assert h2.percentile(p) == pytest.approx(7.0)
+
+
+def test_histogram_percentile_clamps_to_observed_range():
+    # all mass in one wide bucket: interpolation must not wander outside
+    # what was actually observed
+    h = Histogram("t", buckets=(1000.0,))
+    for v in (5.0, 6.0, 7.0):
+        h.observe(v)
+    assert 5.0 <= h.percentile(50) <= 7.0
+    assert 5.0 <= h.percentile(99) <= 7.0
+
+
+def test_histogram_empty_summary():
+    s = Histogram("t").summary()
+    assert s["count"] == 0
+    assert s["p50"] == 0.0 and s["p99"] == 0.0
+
+
+def test_counter_concurrent_incs_lose_nothing():
+    c = Counter("c")
+    n_threads, per = 8, 2000
+
+    def work():
+        for _ in range(per):
+            c.inc()
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == n_threads * per
+
+
+def test_registry_get_or_create_and_type_guard():
+    reg = MetricsRegistry()
+    c = reg.counter("a.b", "help")
+    assert reg.counter("a.b") is c
+    with pytest.raises(TypeError):
+        reg.histogram("a.b")
+    g = reg.gauge("g")
+    g.set(3.5)
+    snap = reg.snapshot()
+    assert snap["a.b"] == 0 and snap["g"] == 3.5
+
+
+def test_prometheus_exposition_shapes():
+    reg = MetricsRegistry()
+    reg.counter("index.queries", "total queries").inc(3)
+    reg.gauge("index.live_rows").set(42)
+    reg.histogram("q.ms", buckets=(1.0, 10.0)).observe(5.0)
+    text = reg.prometheus()
+    assert "index_queries_total 3" in text
+    assert "index_live_rows 42" in text
+    assert 'q_ms_bucket{le="1"} 0' in text
+    assert 'q_ms_bucket{le="10"} 1' in text
+    assert 'q_ms_bucket{le="+Inf"} 1' in text
+    assert "q_ms_count 1" in text
+
+
+# -------------------------------------------------------------------- spans
+
+
+def test_span_nesting_and_trace_id_propagation():
+    obs.enable()
+    roots = []
+    obs.trace.add_sink(roots.append)
+    try:
+        with obs.span("a", x=1) as a:
+            with obs.span("b"):
+                with obs.span("c") as c:
+                    assert c.trace_id == a.trace_id
+                    assert obs.trace.current_trace_id() == a.trace_id
+            with obs.span("d"):
+                pass
+        with obs.span("e") as e:
+            pass
+    finally:
+        obs.trace.remove_sink(roots.append)
+    assert [r.name for r in roots] == ["a", "e"]
+    assert e.trace_id == a.trace_id + 1  # fresh root, fresh trace
+    tree = roots[0].to_dict()
+    assert [ch["name"] for ch in tree["children"]] == ["b", "d"]
+    assert tree["children"][0]["children"][0]["name"] == "c"
+    assert all(ch["trace_id"] == a.trace_id
+               for ch in tree["children"])
+    assert tree["attrs"] == {"x": 1}
+    assert tree["duration_ms"] >= sum(
+        ch["duration_ms"] for ch in tree["children"]) - 1e-6
+
+
+def test_span_metric_feeds_histogram():
+    obs.enable()
+    with obs.span("timed", metric="timed.ms"):
+        pass
+    s = obs.REGISTRY.histogram("timed.ms").summary()
+    assert s["count"] == 1 and s["sum"] >= 0.0
+
+
+def test_trace_ids_distinct_across_threads():
+    obs.enable()
+    ids = []
+    lock = threading.Lock()
+
+    def work():
+        with obs.span("root") as sp:
+            with lock:
+                ids.append(sp.trace_id)
+
+    ts = [threading.Thread(target=work) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(set(ids)) == 8  # each thread's root is its own trace
+
+
+def test_disabled_span_is_shared_noop_singleton():
+    assert not obs.enabled()
+    sp = obs.span("anything", big_attr=list(range(100)))
+    assert sp is obs.NULL_SPAN
+    assert sp is obs.span("other")  # one shared object, no per-call alloc
+    assert not sp  # falsy: `if sp:` guards skip attr work entirely
+    with sp as inner:
+        inner.set(x=1)  # no-op, never raises
+    assert obs.trace.current_trace_id() == 0
+
+
+def test_disabled_spans_record_nothing():
+    before = obs.REGISTRY.histogram("off.ms").summary()["count"]
+    with obs.span("index.query", metric="off.ms"):
+        pass
+    assert obs.REGISTRY.histogram("off.ms").summary()["count"] == before
+    assert len(obs.GLOBAL_SLOW_LOG) == 0
+
+
+# ----------------------------------------------------------------- slow log
+
+
+def test_slowlog_keeps_worst_n_in_order():
+    obs.enable()
+    fake = [0.0]
+    real = obs.trace.clock
+    obs.trace.clock = lambda: fake[0]
+    try:
+        log = SlowQueryLog(capacity=3)
+        for i, dur in enumerate([5.0, 1.0, 9.0, 3.0, 7.0]):
+            with obs.span("index.query", i=i) as sp:
+                fake[0] += dur
+            log.offer(sp)
+    finally:
+        obs.trace.clock = real
+    # every offer beat the then-floor, so all were admitted (two were later
+    # evicted by slower traces); only the 3 worst remain
+    assert log.offered == 5 and log.admitted == 5
+    got = [(e["attrs"]["i"], e["duration_ms"]) for e in log.entries()]
+    assert got == [(2, pytest.approx(9000.0)), (4, pytest.approx(7000.0)),
+                   (0, pytest.approx(5000.0))]
+    assert "index.query" in log.dump()
+
+
+def test_slowlog_filters_non_query_roots():
+    obs.enable()
+    log = SlowQueryLog(capacity=4)
+    with obs.span("index.compact") as sp:
+        pass
+    assert log.offer(sp) is False
+    assert len(log) == 0
+
+
+# ------------------------------------------------- batcher serving counters
+
+
+def test_microbatcher_stats_counters_exact_under_concurrent_flushes(rng):
+    X = rng.uniform(0, 1, (64, 128)).astype(np.float32)
+    idx = SketchIndex(SketchConfig(p=4, k=16, block_d=64), seed=5,
+                      index_cfg=IndexConfig(segment_capacity=64))
+    idx.ingest(jnp.asarray(X))
+    # max_batch=1: every request claims its own flush, so many _run() calls
+    # finish concurrently — exactly the interleaving that loses counts if
+    # the counters were read-modify-written without atomicity
+    mb = MicroBatcher(idx, max_batch=1, max_wait_ms=0.1)
+    n_threads, per = 8, 12
+    errs = []
+
+    def work():
+        q = jnp.asarray(X[:1])
+        try:
+            for _ in range(per):
+                mb.query(q, top_k=3)
+        except Exception as e:  # pragma: no cover - failure detail
+            errs.append(e)
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    mb.flush()
+    assert not errs
+    st = mb.stats()
+    assert st["rows_served"] == n_threads * per
+    assert st["batches_run"] == n_threads * per  # 1-row batches, none lost
+    assert st["open_groups"] == 0
+
+
+def test_microbatcher_stats_histograms_fill_when_enabled(rng):
+    obs.enable()
+    X = rng.uniform(0, 1, (8, 128)).astype(np.float32)
+    idx = SketchIndex(SketchConfig(p=4, k=16, block_d=64), seed=5)
+    idx.ingest(jnp.asarray(X))
+    mb = MicroBatcher(idx, max_batch=4, max_wait_ms=0.5)
+    mb.query(jnp.asarray(X[:2]), top_k=3)
+    st = mb.stats()
+    assert st["batch_rows"]["count"] >= 1
+    assert st["flush_ms"]["count"] >= 1
+    assert st["queue_wait_ms"]["count"] >= 1
+    assert st["flush_ms"]["p95"] >= 0.0
+
+
+# -------------------------------------------------- index stats() exposure
+
+
+def test_index_stats_exposes_latency_and_slow_queries(rng):
+    obs.enable()
+    X = rng.uniform(0, 1, (40, 128)).astype(np.float32)
+    idx = SketchIndex(CFG, seed=5, index_cfg=IndexConfig(segment_capacity=16))
+    idx.ingest(jnp.asarray(X))
+    idx.query(jnp.asarray(X[:2]), top_k=3)
+    idx.query_threshold(jnp.asarray(X[:2]), radius=0.5)
+    idx.compact()
+    st = idx.stats()
+    lat = st["latency"]
+    assert lat["query_ms"]["count"] >= 1
+    assert lat["threshold_ms"]["count"] >= 1
+    assert lat["compact_ms"]["count"] >= 1
+    for k in ("p50", "p95", "p99"):
+        assert lat["query_ms"][k] >= 0.0
+    slow = st["slow_queries"]
+    assert slow and slow[0]["name"] == "index.query"
+    assert {e["name"] for e in slow} <= {"index.query", "batcher.query"}

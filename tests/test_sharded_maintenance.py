@@ -8,11 +8,13 @@ bit-identical to the single-host index over the same live rows.
 """
 
 import gc
+import threading
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import LpSketch, SketchConfig
 from repro.index import (
     IndexConfig,
@@ -341,6 +343,71 @@ def test_rebalance_policy_trigger_and_rate_limit(rng):
     clock[0] = 100.0  # window elapsed: the skewed fleet heals again
     assert sh.maybe_rebalance() > 0
     assert sh.auto_rebalances == 2
+
+
+def test_rebalance_transfers_run_off_the_index_lock(rng):
+    """The rebalance pass stages its ``device_put`` transfers with the index
+    lock RELEASED (compact_async-style copy-then-flip): a query issued while
+    a transfer is parked mid-flight must be served immediately, and the
+    trace must show the transfer span outside the lock-held commit span."""
+    ref, sh, X, ids = _pair(rng, n=256, capacity=64, seed=7)
+    Q = jnp.asarray(X[:3])
+    want_d, want_i = sh.query(Q, top_k=5)  # also warms compile caches
+    sh.devices = sh.devices * 4
+    sh._fan_mesh = None  # shard tags over a repeated device list (as above)
+    for seg in sh.sealed:
+        seg.shard = 0
+
+    in_transfer = threading.Event()
+    release = threading.Event()
+    real = ShardedSketchIndex._transfer_sketch
+
+    def parked_transfer(seg, shard):
+        in_transfer.set()
+        assert release.wait(10.0), "test deadlock: release never set"
+        return real(sh, seg, shard)
+
+    sh._transfer_sketch = parked_transfer
+    roots = []
+    obs.enable()
+    obs.trace.add_sink(roots.append)
+    moved = []
+    try:
+        t = threading.Thread(target=lambda: moved.append(
+            sh.rebalance(force=True)))
+        t.start()
+        assert in_transfer.wait(10.0), "rebalance never reached a transfer"
+        # the transfer is parked RIGHT NOW; a lock-holding pass would block
+        # this query until release — it must answer while the copy is open
+        d, i = sh.query(Q, top_k=5)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(want_d))
+        np.testing.assert_array_equal(i, want_i)
+        release.set()
+        t.join(10.0)
+        assert not t.is_alive()
+    finally:
+        release.set()
+        obs.trace.remove_sink(roots.append)
+        obs.disable()
+    assert moved == [3]  # 4 segments piled on shard 0: 3 migrate off it
+
+    reb = [r for r in roots if r.name == "index.rebalance"]
+    qry = [r for r in roots if r.name == "index.query"]
+    assert len(reb) == 1 and len(qry) == 1
+    transfer, = reb[0].find("index.rebalance.transfer")
+    commit, = reb[0].find("index.rebalance.commit")
+    # the commit (the only lock-held phase) starts after every transfer
+    # ended, and no transfer span nests inside it
+    assert commit.t0 >= transfer.t1
+    assert not commit.find("index.rebalance.transfer")
+    # the mid-pass query ran entirely INSIDE the transfer window: the span
+    # overlap is the proof the lock was free while bits streamed
+    during = qry[0]
+    assert transfer.t0 <= during.t0 and during.t1 <= transfer.t1
+    # answers unchanged by the migration (bits moved, never recomputed)
+    d, i = sh.query(Q, top_k=5)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(want_d))
+    np.testing.assert_array_equal(i, want_i)
 
 
 def test_rebalance_policy_validation():
