@@ -19,6 +19,13 @@ Emits the harness CSV rows (name,us_per_call,derived):
                       p50_ms|dispatch_ms|hits — dispatch_ms is the same
                       query through the sequential-dispatch scan; pairs are
                       self-checked identical before timing
+  planner_routing     us per pre-sketched mle query under approx_ok through
+                      the planner's stacked shard_map route, derived =
+                      p50_ms|dispatch_ms|gates — dispatch_ms is the same
+                      query through the exact dispatch fan; the module
+                      asserts the conformance gate passed AND that the
+                      stacked route beats dispatch (best-of-reps), so the
+                      approx opt-in provably buys latency
   obs_overhead        us per pre-sketched query with span tracing ENABLED,
                       derived = ratio|off_us — ratio is enabled/disabled on
                       interleaved min-of-reps and is asserted <= 1.10 inside
@@ -213,6 +220,46 @@ def run():
         rows.append(("threshold_parallel", p50p * 1e3,
                      f"p50_ms={p50p:.2f}|dispatch_ms={p50d:.2f}"
                      f"|hits={len(tp[0])}"))
+
+        # planner routing payoff: mle under approx_ok rides the stacked
+        # shard_map fan (tolerance-gated against the exact dispatch answer);
+        # the row times that route vs the same pre-sketched mle query through
+        # the dispatch fan and asserts the opt-in actually buys latency —
+        # best-of-reps, the same de-noising the ratchet gate uses
+        from repro.index import ApproxContract
+
+        contract = ApproxContract()
+        exact = sharded_fan_topk(qsk, sharded._segments(), sharded.cfg,
+                                 sharded.devices, top_k=top_k,
+                                 estimator="mle", engine=sharded.engine)
+        # first approx query calibrates the conformance gate for this stack
+        apx = sharded.query_sketch(qsk, top_k=top_k, estimator="mle",
+                                   approx_ok=contract)
+        assert sharded.stats()["stage1"]["mle"] == "parallel"
+        gates = sharded.stats()["planner"]["approx_gates"]
+        assert gates and all(g["ok"] for g in gates)
+        np.testing.assert_allclose(np.asarray(apx[0]), np.asarray(exact[0]),
+                                   rtol=contract.rtol, atol=contract.atol)
+        lat_p, lat_d = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sharded.query_sketch(qsk, top_k=top_k, estimator="mle",
+                                 approx_ok=contract)
+            lat_p.append((time.perf_counter() - t0) * 1e3)
+            t0 = time.perf_counter()
+            sharded_fan_topk(qsk, sharded._segments(), sharded.cfg,
+                             sharded.devices, top_k=top_k, estimator="mle",
+                             engine=sharded.engine)
+            lat_d.append((time.perf_counter() - t0) * 1e3)
+        assert min(lat_p) < min(lat_d), (
+            f"approx mle on the stacked fan ({min(lat_p):.2f}ms best) must "
+            f"beat the dispatch fan ({min(lat_d):.2f}ms best) — otherwise "
+            "the approx_ok opt-in buys nothing")
+        p50p = float(np.percentile(np.asarray(lat_p), 50))
+        p50d = float(np.percentile(np.asarray(lat_d), 50))
+        rows.append(("planner_routing", p50p * 1e3,
+                     f"p50_ms={p50p:.2f}|dispatch_ms={p50d:.2f}"
+                     f"|gates={len(gates)}"))
 
         # skew-healing migration pass on a 4-shard fleet (planner-level fake
         # shards so the row runs on the 1-device CI box): tombstone most rows

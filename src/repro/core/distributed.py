@@ -37,6 +37,7 @@ __all__ = [
     "pairwise_sharded",
     "knn_sharded",
     "stacked_topk_shards",
+    "stacked_mle_topk_shards",
     "stacked_threshold_shards",
     "mesh_shard_devices",
 ]
@@ -195,14 +196,18 @@ def pairwise_sharded(
     def local_mask(a_loc, b_loc, n_loc, n_all_in):
         b_all, n_all = _gather(b_loc, n_all_in)
         hits = []
+        # the radius comparison is a float32 contract shared with the index
+        # scans: cast once, before any scaling, so a float64 python/numpy
+        # radius can never flip a pair sitting exactly at the boundary
+        r32 = jnp.float32(radius)
         for c0, c1 in bounds:  # static unroll: one col strip live at a time
             D = strip_distances(a_loc, b_all[c0:c1], n_loc, n_all[c0:c1],
                                 backend=backend, clip=clip)
             if relative:
                 scale = n_loc[:, None] + n_all[None, c0:c1]
-                hits.append(D < radius * scale)
+                hits.append(D < r32 * scale)
             else:
-                hits.append(D < radius)
+                hits.append(D < r32)
         return jnp.concatenate(hits, axis=1)
 
     mask = shard_map(
@@ -293,6 +298,91 @@ def stacked_topk_shards(
         out_specs=(spec_blk, spec_blk),
         check_vma=False,
     )(Aq, nq, B_stack, nb_stack, mask_stack, pos_stack)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mesh", "cfg", "top_k", "col_block", "data_axes"),
+)
+def stacked_mle_topk_shards(
+    Uq: jax.Array,
+    Mq: jax.Array,
+    U_stack: jax.Array,
+    M_stack: jax.Array,
+    mask_stack: jax.Array,
+    pos_stack: jax.Array,
+    *,
+    mesh: Mesh,
+    cfg: SketchConfig,
+    top_k: int,
+    col_block: int,
+    data_axes: Sequence[str] | str = "data",
+):
+    """Margin-MLE stage 1 as ONE ``shard_map`` over stacked raw sketches.
+
+    The mle sibling of :func:`stacked_topk_shards`: every shard holds an
+    equal-shape block of raw sketch state — ``U_stack`` (S, R, nvec, k) /
+    ``M_stack`` (S, R, p-1) placed along ``data_axes`` — and streams the
+    (tiny, replicated) query sketch through the engine's scanned strip merge
+    with ``pairwise_margin_mle`` strips.  Zero-padded corpus rows are safe:
+    the Newton root-solve is elementwise per (query, corpus) pair, so a
+    padding row corrupts only its own column, which ``mask_stack`` forces to
+    ``+inf`` after the strip estimate.
+
+    Unlike the plain fan this is NOT bitwise stable: segment boundaries
+    vanish inside uniform ``col_block`` strips and XLA fuses the per-strip
+    Newton solves differently, so values drift by fp noise (~2e-5 relative
+    measured) against the exact dispatch answer.  The route therefore only
+    serves queries that opted into an ``ApproxContract``, and the caller
+    asserts the tolerance against the dispatch reference before admitting an
+    operand snapshot (``ShardedSketchIndex._stacked_fan_topk_mle``).
+
+    Returns (vals, positions), both (S, q, k) with k = min(top_k, R),
+    sharded over ``data_axes`` on the leading axis.
+    """
+    from repro.core.pairwise import pairwise_margin_mle
+    from repro.engine.reduce import stacked_topk_scan
+
+    data_axes = _tuple(data_axes)
+    q = Uq.shape[0]
+    _, R, nvec, kdim = U_stack.shape
+    if R % col_block != 0:
+        raise ValueError(f"stack rows {R} not a multiple of col_block {col_block}")
+    n_strips = R // col_block
+    k = min(top_k, R)
+
+    def local_topk(uq, mq, u, mm, m, p):
+        # squeeze the shard axis: each shard sees one (R, ...) block
+        u, mm, m, p = u[0], mm[0], m[0], p[0]
+        qs = LpSketch(U=uq, moments=mq)
+
+        def strip_fn(xs):
+            us, ms = xs
+            return pairwise_margin_mle(qs, LpSketch(U=us, moments=ms), cfg,
+                                       clip=True)
+
+        with jax.named_scope("stage1.stacked_mle_topk"):
+            vals, pos = stacked_topk_scan(
+                strip_fn,
+                (u.reshape(n_strips, col_block, nvec, kdim),
+                 mm.reshape(n_strips, col_block, mm.shape[-1])),
+                m.reshape(n_strips, col_block),
+                p.reshape(n_strips, col_block),
+                rows=q, top_k=k,
+            )
+        return vals[None], pos[None]
+
+    spec_u = P(data_axes, None, None, None)
+    spec_blk = P(data_axes, None, None)
+    spec_row = P(data_axes, None)
+    return shard_map(
+        local_topk,
+        mesh=mesh,
+        in_specs=(P(None, None, None), P(None, None), spec_u, spec_blk,
+                  spec_row, spec_row),
+        out_specs=(P(data_axes, None, None), P(data_axes, None, None)),
+        check_vma=False,
+    )(Uq, Mq, U_stack, M_stack, mask_stack, pos_stack)
 
 
 @partial(

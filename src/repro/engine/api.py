@@ -134,14 +134,19 @@ def pairwise(
                       estimator=estimator, n=n, m=m):
             na_h, nb_h = np.asarray(na), np.asarray(nb)
             rows_out, cols_out = [], []
+            # float32 radius contract: strips are float32, and a float64 host
+            # comparison (NEP 50 makes a Python/np.float64 radius "strong")
+            # would flip ties exactly at the (scaled) radius vs the
+            # device-side scans
+            r32 = np.float32(radius)
             for r0, r1 in strip_bounds(n, row_block):
                 for c0, c1 in strip_bounds(m, col_block):
                     D = np.asarray(strip(r0, r1, c0, c1))
                     if relative:
                         scale = na_h[r0:r1, None] + nb_h[None, c0:c1]
-                        mask = D < radius * scale
+                        mask = D < r32 * scale
                     else:
-                        mask = D < radius
+                        mask = D < r32
                     rr, cc = np.nonzero(mask)
                     rows_out.append(rr + r0)
                     cols_out.append(cc + c0)

@@ -17,6 +17,7 @@ from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .backends import strip_distances
 
@@ -28,6 +29,7 @@ __all__ = [
     "merge_topk",
     "rerank_topk",
     "strip_bounds",
+    "within_tolerance",
 ]
 
 _IDX_SENTINEL = jnp.iinfo(jnp.int32).max
@@ -202,6 +204,30 @@ def stacked_threshold_scan(
 
     _, hits = jax.lax.scan(body, None, xs)  # (n_strips, rows, col_block)
     return jnp.swapaxes(hits, 0, 1).reshape(rows, n_strips * col_block)
+
+
+def within_tolerance(got, ref, *, rtol: float, atol: float
+                     ) -> Tuple[bool, float]:
+    """(ok, max_rel_drift) of a re-tiled fold against its exact reference.
+
+    The conformance check behind the planner's ``ApproxContract``: folds
+    whose per-strip solves are not bitwise stable under re-tiling (the
+    stacked margin-MLE fan) are admitted only when every value satisfies
+    ``|got - ref| <= atol + rtol * |ref|``.  The returned drift is the worst
+    observed ``|got - ref| / |ref|`` — the number the contract bounds, and
+    what the planner memoizes per operand snapshot.  A shape mismatch fails
+    outright (candidate sets diverged: that is a routing bug, not drift).
+    """
+    got = np.asarray(got, np.float64)
+    ref = np.asarray(ref, np.float64)
+    if got.shape != ref.shape:
+        return False, float("inf")
+    if got.size == 0:
+        return True, 0.0
+    err = np.abs(got - ref)
+    ok = bool(np.all(err <= atol + rtol * np.abs(ref)))
+    drift = float((err / np.maximum(np.abs(ref), 1e-30)).max())
+    return ok, drift
 
 
 def streaming_topk(

@@ -18,8 +18,15 @@ reductions across segments and merge candidates with dense tie-breaking.
 across a device mesh and queries fanned through the two-stage reduce
 (bit-identical results); ``compact_async`` on either class rebuilds decayed
 segments off the query path and swaps them in atomically.
+
+Every query is routed by a ``QueryPlanner``: the plan picks the serving
+route (dense / dispatch fan / stacked fan) from capabilities and measured
+per-route cost, and ``ApproxContract`` opts a query into tolerance-gated
+approximate routes (mle on the stacked fan) — the default contract stays
+bit-exact.
 """
 
+from .planner import ApproxContract, QueryPlan, QueryPlanner
 from .query import MicroBatcher, fan_topk, threshold_scan
 from .segment import ActiveSegment, SealedSegment, SketchReservoir
 from .service import CompactionHandle, CompactionPolicy, IndexConfig, SketchIndex
@@ -38,6 +45,9 @@ __all__ = [
     "CompactionHandle",
     "CompactionPolicy",
     "RebalancePolicy",
+    "ApproxContract",
+    "QueryPlan",
+    "QueryPlanner",
     "MicroBatcher",
     "ActiveSegment",
     "SealedSegment",

@@ -1,0 +1,338 @@
+"""``repro.index.planner`` — one place that picks a serving route.
+
+The serving stack grew four execution paths for the same two reduces:
+
+  dense     the single-host fan (``index.query.fan_topk`` /
+            ``threshold_scan``) — the only route when the index is not
+            sharded;
+  dispatch  the per-segment async-dispatch fan
+            (``sharded_fan_topk`` / ``sharded_threshold_scan``) — works on
+            any device list, bit-identical to dense by construction;
+  stacked   the shard_map stage-1 fan over equal-shape per-shard blocks
+            (``_stacked_fan_topk`` / ``_stacked_threshold``) — needs a real
+            serving mesh, bitwise invariant to the re-tiling for the plain
+            estimator only.
+
+Route choice used to live in scattered ``if self._fan_mesh is not None and
+estimator == "plain"`` branches; this module replaces them with an explicit
+:class:`QueryPlan` — the chosen route plus a fallback chain — so the
+executors in ``ShardedSketchIndex`` just walk ``plan.chain`` until a route
+serves the query.  Three contracts are encoded here and nowhere else:
+
+  * **Bit-exactness is the default.**  A plan without an
+    :class:`ApproxContract` only ever uses routes that are bit-identical to
+    the single-host answer: plain may ride the stacked fan (the strip
+    tiling is a proven no-op for packed-matmul strips), mle stays on the
+    dispatch fan's exact per-segment strip programs.
+  * **``approx_ok`` is an opt-in, asserted bound.**  Margin-MLE's Newton
+    strips are not bitwise stable under the stacked re-tiling (~2e-5
+    relative drift measured); passing ``approx_ok=ApproxContract(...)``
+    lets mle top-k ride the stacked fan, but only after a one-time
+    conformance gate per operand snapshot proves the stacked answer agrees
+    with the exact dispatch answer within (rtol, atol).  A failed gate is
+    memoized and the stack serves via dispatch — drift never reaches a
+    caller unasserted.
+  * **Measured cost breaks ties.**  When several routes are eligible, an
+    EWMA of observed per-route stage-1 latency (fed by the always-on
+    ``perf_counter`` timings the executors report via :meth:`observe`,
+    seeded from the ``repro.obs`` stage-1 histograms when tracing has
+    filled them) orders the chain — with hysteresis, so routing does not
+    flap on noise and the default-plan answers stay deterministic.
+
+The planner also keeps the planned-vs-actual ledger: every plan increments
+a ``planner.planned_<route>`` counter, every served query a
+``planner.actual_<route>`` counter, and a served route different from the
+planned one counts into ``planner.fallbacks`` — the readout that makes
+silent degradation (the old ``stats()["stage1"]`` misreport) impossible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Dict, Hashable, Optional, Tuple
+
+from repro.obs.metrics import REGISTRY
+
+__all__ = ["ApproxContract", "QueryPlan", "QueryPlanner", "STAGE1_LABEL"]
+
+REDUCES = ("topk", "threshold")
+ESTIMATORS = ("plain", "mle")
+ROUTES = ("stacked", "dispatch", "dense")
+
+# stats()/span vocabulary predates the planner: the stacked shard_map fan
+# has always reported as "parallel".  Keep the external names stable.
+STAGE1_LABEL = {"stacked": "parallel", "dispatch": "dispatch",
+                "dense": "dense"}
+
+# per-route stage-1 latency histograms (filled by the executors' spans while
+# tracing is enabled) — the cold-start seed for the cost model
+_ROUTE_METRIC = {
+    "stacked": "index.stage1_parallel_ms",
+    "dispatch": "index.stage1_dispatch_ms",
+    "dense": "index.stage1_dense_ms",
+}
+
+_PLANNED = {r: REGISTRY.counter(f"planner.planned_{r}",
+                                f"query plans that chose the {r} route")
+            for r in ROUTES}
+_ACTUAL = {r: REGISTRY.counter(f"planner.actual_{r}",
+                               f"queries actually served by the {r} route")
+           for r in ROUTES}
+_FALLBACKS = REGISTRY.counter(
+    "planner.fallbacks",
+    "queries served by a route other than the planned one")
+_GATE_PASS = REGISTRY.counter(
+    "planner.approx_gate_pass",
+    "approx_ok conformance gates that admitted a stacked mle snapshot")
+_GATE_FAIL = REGISTRY.counter(
+    "planner.approx_gate_fail",
+    "approx_ok conformance gates that rejected a stacked mle snapshot")
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxContract:
+    """Opt-in tolerance contract for approximate routing.
+
+    ``|got - ref| <= atol + rtol * |ref|`` elementwise against the exact
+    (dispatch) answer — checked once per operand snapshot by the planner's
+    conformance gate, not assumed.  The defaults leave ~5x headroom over
+    the ~2e-5 relative drift measured for the stacked margin-MLE fold, with
+    ``atol`` absorbing clipped near-zero distances (0.0 vs tiny-positive
+    flips under re-tiling).
+    """
+
+    rtol: float = 1e-4
+    atol: float = 1e-5
+
+    def __post_init__(self):
+        for name in ("rtol", "atol"):
+            v = getattr(self, name)
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v >= 0):
+                raise ValueError(
+                    f"ApproxContract.{name} must be a finite float >= 0, "
+                    f"got {v!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """An explicit routing decision: what to run, what to fall back to,
+    what it is expected to cost, and why."""
+
+    reduce: str
+    estimator: str
+    route: str
+    fallbacks: Tuple[str, ...] = ()
+    expected_cost_ms: Optional[float] = None
+    reason: str = ""
+    approx: Optional[ApproxContract] = None
+
+    @property
+    def chain(self) -> Tuple[str, ...]:
+        """Routes in execution order: the pick, then its fallbacks."""
+        return (self.route,) + self.fallbacks
+
+    def describe(self) -> str:
+        cost = (f"{self.expected_cost_ms:.2f}ms"
+                if self.expected_cost_ms is not None else "unknown")
+        fb = ",".join(self.fallbacks) or "-"
+        return (f"route={self.route} fallbacks={fb} expected_cost={cost} "
+                f"reason={self.reason}")
+
+
+class QueryPlanner:
+    """Route selection + the cost/conformance state behind it.
+
+    One instance per index (created by ``SketchIndex.__init__``), so cost
+    samples never leak between corpora.  All methods are thread-safe — the
+    batcher's flusher threads plan and observe concurrently.
+    """
+
+    # a measured route displaces the static preference only when it is
+    # decisively cheaper on enough samples: eligible routes return the same
+    # answer (identical under the default contract, within the asserted
+    # tolerance under approx_ok), so routing stability is worth more than a
+    # few percent of stage-1 latency
+    hysteresis = 1.5
+    min_samples = 3
+
+    def __init__(self, *, alpha: float = 0.25):
+        if not 0 < alpha <= 1:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = alpha
+        self._lock = threading.Lock()
+        self._cost: Dict[Tuple[str, str, str], float] = {}
+        self._count: Dict[Tuple[str, str, str], int] = {}
+        self._planned: Dict[str, int] = {}
+        self._actual: Dict[str, int] = {}
+        self._fallbacks = 0
+        self._gates: Dict[Hashable, Tuple[bool, float]] = {}
+        self.last_plan: Optional[QueryPlan] = None
+
+    # ------------------------------------------------------------- planning
+
+    def plan(self, *, reduce: str, estimator: str, sharded: bool,
+             mesh_available: bool = False,
+             sealed_segments: Optional[int] = None,
+             approx_ok: Optional[ApproxContract] = None,
+             record: bool = True) -> QueryPlan:
+        """Pick a route for one query.
+
+        ``sealed_segments`` is advisory shape information: the stacked fan
+        stays the plan whenever the mesh makes it *possible* (capability),
+        because the sealed count can change between planning and execution
+        — the executor declines an empty stack and the fallback chain
+        serves.  ``record=False`` is the read-only form (``stats()``
+        predicting the route an unobserved estimator would take) — it must
+        not count as a planned query.
+        """
+        if reduce not in REDUCES:
+            raise ValueError(f"unknown reduce {reduce!r} (want {REDUCES})")
+        if estimator not in ESTIMATORS:
+            raise ValueError(
+                f"unknown estimator {estimator!r} (want {ESTIMATORS})")
+        if approx_ok is not None and not isinstance(approx_ok, ApproxContract):
+            raise TypeError(
+                "approx_ok must be an ApproxContract (or None for the "
+                f"bit-exact default), got {type(approx_ok).__name__}")
+
+        if not sharded:
+            plan = self._mk(reduce, estimator, "dense", (), approx_ok,
+                            "single-host index: the dense fan is the route")
+        elif not mesh_available:
+            plan = self._mk(reduce, estimator, "dispatch", (), approx_ok,
+                            "no usable serving mesh: the stacked fan needs "
+                            "one distinct device per shard")
+        elif estimator == "mle" and approx_ok is None:
+            plan = self._mk(reduce, estimator, "dispatch", (), approx_ok,
+                            "mle is pinned to the exact dispatch strips — "
+                            "its Newton solves are not bitwise stable under "
+                            "the stacked re-tiling (pass approx_ok to opt "
+                            "into the stacked fan)")
+        elif estimator == "mle" and reduce == "threshold":
+            plan = self._mk(reduce, estimator, "dispatch", (), approx_ok,
+                            "no stacked mle threshold scan exists; dispatch "
+                            "serves mle thresholds regardless of approx_ok")
+        else:
+            # stacked is eligible (plain always; mle top-k under approx_ok,
+            # tolerance-gated downstream).  Dispatch stays in the chain: the
+            # stacked executor declines when nothing is sealed on a shard
+            # yet, or when this operand snapshot failed its approx gate.
+            route, fallbacks = "stacked", ("dispatch",)
+            reason = ("one shard_map fold over every shard beats "
+                      "per-segment dispatch" if estimator == "plain" else
+                      f"approx_ok(rtol={approx_ok.rtol:g}, "
+                      f"atol={approx_ok.atol:g}): mle rides the stacked "
+                      "fan, conformance-gated per snapshot")
+            if sealed_segments == 0:
+                reason += " (nothing sealed yet: expect the dispatch "\
+                          "fallback to serve)"
+            flipped = self._cost_prefers_dispatch(reduce, estimator)
+            if flipped:
+                cs, cd = flipped
+                route, fallbacks = "dispatch", ("stacked",)
+                reason = (f"cost model: dispatch EWMA {cd:.2f}ms beats "
+                          f"stacked {cs:.2f}ms by >= {self.hysteresis:g}x")
+            plan = self._mk(reduce, estimator, route, fallbacks, approx_ok,
+                            reason)
+        if record:
+            with self._lock:
+                self._planned[plan.route] = (
+                    self._planned.get(plan.route, 0) + 1)
+                self.last_plan = plan
+            _PLANNED[plan.route].inc()
+        return plan
+
+    def _mk(self, reduce, estimator, route, fallbacks, approx, reason):
+        return QueryPlan(reduce=reduce, estimator=estimator, route=route,
+                         fallbacks=tuple(fallbacks),
+                         expected_cost_ms=self.expected_cost_ms(
+                             reduce, estimator, route),
+                         reason=reason, approx=approx)
+
+    def _cost_prefers_dispatch(self, reduce, estimator):
+        """(stacked_ms, dispatch_ms) when measured cost decisively favors
+        dispatch; None otherwise (insufficient samples, or within the
+        hysteresis band — the static preference stands)."""
+        with self._lock:
+            ks = (reduce, estimator, "stacked")
+            kd = (reduce, estimator, "dispatch")
+            if (self._count.get(ks, 0) < self.min_samples
+                    or self._count.get(kd, 0) < self.min_samples):
+                return None
+            cs, cd = self._cost[ks], self._cost[kd]
+        if cs > self.hysteresis * cd:
+            return cs, cd
+        return None
+
+    # ----------------------------------------------------------- cost model
+
+    def expected_cost_ms(self, reduce: str, estimator: str,
+                         route: str) -> Optional[float]:
+        """EWMA of observed stage-1 latency for (reduce, estimator, route);
+        seeded from the per-route obs histogram p50 when this planner has
+        no samples yet (histograms fill only while tracing is enabled, so
+        they are a seed, never the primary feed)."""
+        with self._lock:
+            v = self._cost.get((reduce, estimator, route))
+        if v is not None:
+            return v
+        hist = REGISTRY.get(_ROUTE_METRIC.get(route, ""))
+        if hist is not None and getattr(hist, "count", 0) >= self.min_samples:
+            return float(hist.percentile(50))
+        return None
+
+    def observe(self, plan: QueryPlan, route: str, elapsed_ms: float) -> None:
+        """Record which route actually served a planned query, and at what
+        cost.  Keyed per (reduce, estimator, route): an mle dispatch sample
+        must never poison plain's dispatch estimate."""
+        key = (plan.reduce, plan.estimator, route)
+        with self._lock:
+            prev = self._cost.get(key)
+            self._cost[key] = (float(elapsed_ms) if prev is None else
+                               (1.0 - self.alpha) * prev
+                               + self.alpha * float(elapsed_ms))
+            self._count[key] = self._count.get(key, 0) + 1
+            self._actual[route] = self._actual.get(route, 0) + 1
+            fell_back = route != plan.route
+            if fell_back:
+                self._fallbacks += 1
+        _ACTUAL[route].inc()
+        if fell_back:
+            _FALLBACKS.inc()
+
+    # ----------------------------------------------------- conformance gate
+
+    def gate_status(self, key: Hashable) -> Optional[bool]:
+        """True/False once the snapshot under ``key`` has been gated; None
+        while unchecked (the executor must calibrate)."""
+        with self._lock:
+            entry = self._gates.get(key)
+        return None if entry is None else entry[0]
+
+    def record_gate(self, key: Hashable, ok: bool, max_rel_drift: float
+                    ) -> bool:
+        """Memoize one conformance-gate verdict per operand snapshot — the
+        dual (stacked + exact) computation runs once, not per query."""
+        with self._lock:
+            self._gates[key] = (bool(ok), float(max_rel_drift))
+        (_GATE_PASS if ok else _GATE_FAIL).inc()
+        return bool(ok)
+
+    # -------------------------------------------------------------- readout
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "planned": dict(self._planned),
+                "actual": dict(self._actual),
+                "fallbacks": self._fallbacks,
+                "cost_ewma_ms": {"/".join(k): round(v, 4)
+                                 for k, v in sorted(self._cost.items())},
+                "approx_gates": [
+                    {"ok": ok, "max_rel_drift": drift}
+                    for ok, drift in self._gates.values()
+                ],
+            }

@@ -15,8 +15,8 @@ earliest-ingested live row, same as dense.
 threshold criterion, yielding (query_row, row_id) pairs.
 
 ``MicroBatcher`` is the serving front door: concurrent callers' query rows
-are coalesced into one fused engine pass per (top_k, estimator) group — one
-sketch call + one fan per batch instead of one per request.
+are coalesced into one fused engine pass per (top_k, estimator, approx_ok)
+group — one sketch call + one fan per batch instead of one per request.
 """
 
 from __future__ import annotations
@@ -217,8 +217,8 @@ def fan_topk(
     base = 0
     id_map: List[np.ndarray] = []
     q_packed = _pack_query(qsk, cfg, estimator)
-    with obs.span("index.fan.stage1", mode="single",
-                  segments=len(segments)):
+    with obs.span("index.fan.stage1", metric="index.stage1_dense_ms",
+                  mode="single", segments=len(segments)):
         for seg in segments:
             n = _segment_rows(seg)
             vals, idx = _fold_segment_topk(vals, idx, qsk, q_packed, seg, cfg,
@@ -262,7 +262,7 @@ class MicroBatcher:
     """Coalesce concurrent single/few-row queries into one fused index pass.
 
     Callers block in ``query``; a request joins the open batch for its
-    (top_k, estimator) group and is flushed when the batch reaches
+    (top_k, estimator, approx_ok) group and is flushed when the batch reaches
     ``max_batch`` rows or ``max_wait_ms`` elapses (whichever first).  One
     sketch + one segment fan serves the whole batch.
     """
@@ -272,7 +272,7 @@ class MicroBatcher:
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self._lock = threading.Lock()
-        self._groups: dict = {}  # (top_k, estimator) -> _Batch
+        self._groups: dict = {}  # (top_k, estimator, approx_ok) -> _Batch
         # atomic instruments, NOT bare ints: the flush path runs on whichever
         # caller claims the batch, so two flushes can finish concurrently and
         # a read-modify-write outside the batch lock would drop counts
@@ -312,11 +312,14 @@ class MicroBatcher:
             self.error: Optional[BaseException] = None
             self.t_open = obs.trace.clock()  # for the queue-wait histogram
 
-    def query(self, rows, top_k: int = 10, estimator: str = "plain"):
+    def query(self, rows, top_k: int = 10, estimator: str = "plain",
+              approx_ok=None):
         """(distances (b, k), row_ids (b, k)) for this caller's rows, with
         k = min(top_k, index live rows).  Validated up front: a malformed
         ``top_k`` fails only this caller, never the coalesced batch it would
-        otherwise poison."""
+        otherwise poison.  ``approx_ok`` is part of the batch key: callers
+        holding different tolerance contracts never share a fused pass (the
+        contract decides the route, and the route decides the answer)."""
         _check_top_k(top_k)
         rows = np.atleast_2d(np.asarray(rows))
         if rows.shape[0] == 0:
@@ -325,7 +328,7 @@ class MicroBatcher:
             k_out = min(top_k, self.index.n_live)
             return (jnp.zeros((0, k_out), jnp.float32),
                     np.zeros((0, k_out), np.int64))
-        key = (top_k, estimator)
+        key = (top_k, estimator, approx_ok)
         with self._lock:
             batch = self._groups.get(key)
             if batch is None:
@@ -354,7 +357,7 @@ class MicroBatcher:
         return dists[lo:lo + rows.shape[0]], ids[lo:lo + rows.shape[0]]
 
     def _run(self, batch: "_Batch", key) -> None:
-        top_k, estimator = key
+        top_k, estimator, approx_ok = key
         try:
             X = np.concatenate(batch.rows, axis=0)
             n = X.shape[0]
@@ -372,7 +375,8 @@ class MicroBatcher:
             with obs.span("batcher.query", metric="batcher.flush_ms",
                           rows=n, top_k=top_k, estimator=estimator):
                 batch.results = self.index.query(X, top_k=top_k,
-                                                 estimator=estimator)
+                                                 estimator=estimator,
+                                                 approx_ok=approx_ok)
             self._batches.inc()
             self._rows.inc(n)
             _BATCHES_TOTAL.inc()

@@ -37,6 +37,7 @@ __all__ = [
     "SealedSegment",
     "SketchReservoir",
     "pack_shard_stack",
+    "pack_shard_sketch_stack",
     "shard_stack_live",
     "packed_stack_width",
 ]
@@ -315,6 +316,47 @@ def pack_shard_stack(group, rows: int, cfg: SketchConfig, device=None):
         B_blk = jax.device_put(B_blk, device)
         nb_blk = jax.device_put(nb_blk, device)
     return B_blk, nb_blk, pos
+
+
+def pack_shard_sketch_stack(group, rows: int, cfg: SketchConfig, device=None):
+    """Stack one shard's raw sealed sketches into equal-shape blocks.
+
+    The margin-MLE sibling of :func:`pack_shard_stack`: mle strips consume
+    the sketch itself (per-row projections ``U`` and marginal ``moments``),
+    not the plain packed factors, so the stacked mle fan needs per-shard
+    ``(rows, nvec, k)`` / ``(rows, p-1)`` blocks zero-padded to the
+    fleet-wide uniform height.  Zero padding is safe for the elementwise
+    Newton solve — a garbage estimate stays confined to its own (masked)
+    column and the stacked fan forces it to ``+inf`` after the strip.
+
+    Returns ``(U_blk (rows, nvec, k), M_blk (rows, p-1))`` committed to
+    ``device``.  Positions and the live mask are shared with the plain
+    stack (same segments, same stack order), so they are not rebuilt here.
+    """
+    nvec = cfg.vectors_per_row
+    parts_U, parts_M, r0 = [], [], 0
+    for _base, seg in group:
+        parts_U.append(seg.sketch.U)
+        parts_M.append(seg.sketch.moments)
+        r0 += seg.n
+    if r0 > rows:
+        raise ValueError(f"shard holds {r0} rows > stack height {rows}")
+    n_pad = rows - r0
+    if not parts_U:
+        U_blk = jnp.zeros((rows, nvec, cfg.k), jnp.dtype(cfg.projection.dtype))
+        M_blk = jnp.zeros((rows, cfg.p - 1), jnp.float32)
+    else:
+        if n_pad:
+            parts_U.append(jnp.zeros((n_pad,) + parts_U[0].shape[1:],
+                                     parts_U[0].dtype))
+            parts_M.append(jnp.zeros((n_pad,) + parts_M[0].shape[1:],
+                                     parts_M[0].dtype))
+        U_blk = jnp.concatenate(parts_U, axis=0)
+        M_blk = jnp.concatenate(parts_M, axis=0)
+    if device is not None:
+        U_blk = jax.device_put(U_blk, device)
+        M_blk = jax.device_put(M_blk, device)
+    return U_blk, M_blk
 
 
 def shard_stack_live(group, rows: int) -> np.ndarray:

@@ -28,6 +28,7 @@ from repro.engine import EngineConfig
 from repro.obs.metrics import REGISTRY
 from repro.obs.slowlog import GLOBAL_SLOW_LOG
 
+from .planner import ApproxContract, QueryPlanner
 from .query import fan_topk, threshold_scan
 from .segment import ActiveSegment, SealedSegment
 
@@ -159,6 +160,11 @@ class SketchIndex:
         self._compaction: Optional[CompactionHandle] = None
         self._last_compaction_start: Optional[float] = None
         self.auto_compactions = 0  # policy-triggered passes, for observability
+        # one planner per index: route choice + the cost/conformance state
+        # behind it never leak between corpora (the sharded subclass routes
+        # every query through it; here it pins the dense route and keeps the
+        # planned-vs-actual ledger consistent across index kinds)
+        self.planner = QueryPlanner()
 
     # ------------------------------------------------------------------ state
 
@@ -478,40 +484,62 @@ class SketchIndex:
     # ------------------------------------------------------------------ query
 
     def query(self, rows: jax.Array, top_k: int = 10,
-              estimator: str = "plain") -> Tuple[jax.Array, np.ndarray]:
+              estimator: str = "plain", *,
+              approx_ok: Optional[ApproxContract] = None
+              ) -> Tuple[jax.Array, np.ndarray]:
         """Top-k live neighbors of (q, D) query rows.
 
         Returns (distances (q, k), row_ids (q, k)), ascending,
         k = min(top_k, live rows).  ``estimator="mle"`` routes margin-MLE
         strips (Lemma 4) instead of plain packed-matmul strips.
+        ``approx_ok`` opts into the planner's tolerance contract (sharded
+        indexes may then serve mle from the stacked fan); the single-host
+        fan is exact regardless, so it accepts and ignores the contract.
         """
         qsk = sketch(jnp.asarray(rows), self.key, self.cfg)
-        return self.query_sketch(qsk, top_k=top_k, estimator=estimator)
+        return self.query_sketch(qsk, top_k=top_k, estimator=estimator,
+                                 approx_ok=approx_ok)
 
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
-                     estimator: str = "plain"):
+                     estimator: str = "plain", *,
+                     approx_ok: Optional[ApproxContract] = None):
         with obs.span("index.query", metric="index.query_ms", kind="topk",
                       top_k=top_k, estimator=estimator, rows=qsk.n):
-            return fan_topk(qsk, self._segments(), self.cfg,
-                            top_k=top_k, estimator=estimator,
-                            engine=self.engine)
+            plan = self.planner.plan(reduce="topk", estimator=estimator,
+                                     sharded=False, approx_ok=approx_ok)
+            t0 = time.perf_counter()
+            out = fan_topk(qsk, self._segments(), self.cfg,
+                           top_k=top_k, estimator=estimator,
+                           engine=self.engine)
+            self.planner.observe(plan, "dense",
+                                 (time.perf_counter() - t0) * 1e3)
+            return out
 
     def query_threshold(self, rows: jax.Array, radius: float, *,
-                        relative: bool = False, estimator: str = "plain"):
+                        relative: bool = False, estimator: str = "plain",
+                        approx_ok: Optional[ApproxContract] = None):
         """(query_rows, row_ids) of live rows with D < radius."""
         qsk = sketch(jnp.asarray(rows), self.key, self.cfg)
         return self.query_threshold_sketch(qsk, radius=radius,
                                            relative=relative,
-                                           estimator=estimator)
+                                           estimator=estimator,
+                                           approx_ok=approx_ok)
 
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
-                               estimator: str = "plain"):
+                               estimator: str = "plain",
+                               approx_ok: Optional[ApproxContract] = None):
         with obs.span("index.query", metric="index.threshold_ms",
                       kind="threshold", estimator=estimator, rows=qsk.n):
-            return threshold_scan(qsk, self._segments(), self.cfg,
-                                  radius=radius, relative=relative,
-                                  estimator=estimator, engine=self.engine)
+            plan = self.planner.plan(reduce="threshold", estimator=estimator,
+                                     sharded=False, approx_ok=approx_ok)
+            t0 = time.perf_counter()
+            out = threshold_scan(qsk, self._segments(), self.cfg,
+                                 radius=radius, relative=relative,
+                                 estimator=estimator, engine=self.engine)
+            self.planner.observe(plan, "dense",
+                                 (time.perf_counter() - t0) * 1e3)
+            return out
 
     # ------------------------------------------------------------ persistence
 

@@ -45,10 +45,18 @@ Stage 1 runs in one of two modes, for BOTH reduces (top-k and threshold):
       bitmap, never a distance.  Tombstone deltas refresh the stacked live
       mask device-side (a per-shard scatter of just the flipped rows).
   dispatch (fallback)  the per-segment async-dispatch fan below — used when
-      no usable mesh exists (duplicate device lists), and always for the
+      no usable mesh exists (duplicate device lists), and by default for the
       ``mle`` estimator, whose per-strip Newton solves are NOT bitwise stable
       under XLA fusion contexts; keeping mle on the exact single-host strip
-      programs is what keeps it bit-identical.
+      programs is what keeps it bit-identical.  Passing
+      ``approx_ok=ApproxContract(...)`` opts an mle top-k query onto the
+      stacked fan, tolerance-gated per operand snapshot against the exact
+      dispatch answer.
+
+Which mode serves a given query is decided by ``repro.index.planner``: every
+query computes an explicit ``QueryPlan`` (route + fallback chain + expected
+cost) and the executors below walk ``plan.chain`` until a route serves —
+there are no per-path estimator branches here anymore.
 
 Because every shard's stacked block pads to the tallest shard, a skewed
 shard inflates the whole fleet's stage-1 work; ``rebalance()`` (and its
@@ -72,14 +80,16 @@ from repro import obs
 from repro.core.distributed import (
     _tuple as _axes_tuple,
     mesh_shard_devices,
+    stacked_mle_topk_shards,
     stacked_threshold_shards,
     stacked_topk_shards,
 )
 from repro.core.sketch import LpSketch, SketchConfig
 from repro.engine import EngineConfig
-from repro.engine.reduce import rerank_topk
+from repro.engine.reduce import rerank_topk, within_tolerance
 from repro.obs.metrics import REGISTRY
 
+from .planner import STAGE1_LABEL, ApproxContract, QueryPlan
 from .query import (
     _IDX_SENTINEL,
     _check_top_k,
@@ -93,6 +103,7 @@ from .query import (
 from .segment import (
     ActiveSegment,
     SealedSegment,
+    pack_shard_sketch_stack,
     pack_shard_stack,
     packed_stack_width,
     shard_stack_live,
@@ -251,7 +262,7 @@ class _StackedOperands:
 
     __slots__ = ("key", "groups", "rows", "col_block", "B", "nb", "pos",
                  "pos_host", "mask", "mask_versions", "mask_full_builds",
-                 "mask_scatter_updates")
+                 "mask_scatter_updates", "Usk", "Msk")
 
     def __init__(self, key, groups, rows, col_block, B, nb, pos, pos_host):
         self.key = key
@@ -264,6 +275,10 @@ class _StackedOperands:
         self.mask_versions = None
         self.mask_full_builds = 0
         self.mask_scatter_updates = 0
+        # raw-sketch stacks for the approx mle fan, built lazily on first use
+        # (most corpora never opt in) and sharing this snapshot's lifetime
+        self.Usk = None
+        self.Msk = None
 
 
 def _build_stacked_operands(shard_groups, n_shards, mesh, devices,
@@ -329,7 +344,8 @@ def sharded_fan_topk(
     # dispatch every shard's stage-1 work before gathering any of it: jax
     # dispatch is async, so the shards compute concurrently and stage-1
     # wall-clock is the slowest shard, not the sum
-    with obs.span("index.fan.stage1", mode="dispatch", shards=len(groups)):
+    with obs.span("index.fan.stage1", metric="index.stage1_dispatch_ms",
+                  mode="dispatch", shards=len(groups)):
         pending = []
         for shard, group in groups:
             dev = devices[shard] if shard is not None else None
@@ -373,7 +389,8 @@ def sharded_threshold_scan(
     nq_h = np.asarray(qsk.norm_pp(cfg.p))
 
     rows_out, ids_out = [], []
-    with obs.span("index.fan.stage1", mode="dispatch", shards=len(groups)):
+    with obs.span("index.fan.stage1", metric="index.stage1_dispatch_ms",
+                  mode="dispatch", shards=len(groups)):
         for shard, group in groups:
             dev = devices[shard] if shard is not None else None
             with obs.span("index.fan.shard", shard=shard,
@@ -436,6 +453,9 @@ class ShardedSketchIndex(SketchIndex):
                 pass
         self._stack: Optional[_StackedOperands] = None
         self._last_stage1: Optional[str] = None  # mode of the last query
+        # last OBSERVED stage-1 mode per estimator — what stats() reports
+        # once a query has actually run (predictions only fill the gap)
+        self._last_route: dict = {}
         self.rebalance_policy = rebalance_policy
         self._last_rebalance_start: Optional[float] = None
         self._rebalance_active = False  # one transfer pass at a time
@@ -460,15 +480,29 @@ class ShardedSketchIndex(SketchIndex):
         s["segments_per_shard"] = per_shard
         s["rows_per_shard"] = rows_per_shard
         s["shard_skew"] = self._shard_skew(rows_per_shard)
-        # per-estimator: every mle query takes the dispatch fan even when a
-        # stack exists — a single flag here misread mle latency as parallel
+        # per-estimator, last OBSERVED mode — a plain query silently falling
+        # back to dispatch (nothing sealed, stale devices) must show up here.
+        # Before any query runs, report the planner's prediction instead of
+        # guessing from `_fan_mesh` directly.
         s["stage1"] = {
-            "plain": "parallel" if self._fan_mesh is not None else "dispatch",
-            "mle": "dispatch",
-            "last": self._last_stage1,
+            est: self._last_route.get(est, self._predicted_stage1(est))
+            for est in ("plain", "mle")
         }
+        s["stage1"]["last"] = self._last_stage1
+        s["planner"] = self.planner.stats()
         s["auto_rebalances"] = self.auto_rebalances
         return s
+
+    def _predicted_stage1(self, estimator: str) -> str:
+        """Mode a top-k query with this estimator would plan right now
+        (read-only: never counts as a planned query)."""
+        with self._lock:
+            sealed = len(self.sealed)
+        plan = self.planner.plan(
+            reduce="topk", estimator=estimator, sharded=True,
+            mesh_available=self._fan_mesh is not None,
+            sealed_segments=sealed, record=False)
+        return STAGE1_LABEL[plan.route]
 
     @staticmethod
     def _shard_skew(rows_per_shard) -> float:
@@ -671,27 +705,58 @@ class ShardedSketchIndex(SketchIndex):
 
     # ---------------------------------------------------------------- query
 
+    def _plan(self, reduce: str, estimator: str,
+              approx_ok: Optional[ApproxContract]) -> QueryPlan:
+        with self._lock:
+            sealed = len(self.sealed)
+        return self.planner.plan(
+            reduce=reduce, estimator=estimator, sharded=True,
+            mesh_available=self._fan_mesh is not None,
+            sealed_segments=sealed, approx_ok=approx_ok)
+
+    def _note_route(self, plan: QueryPlan, route: str, elapsed_s: float,
+                    sp) -> None:
+        """One served query: observed mode, legacy counters, cost sample."""
+        label = STAGE1_LABEL[route]
+        self._last_stage1 = label
+        self._last_route[plan.estimator] = label
+        (_STAGE1_PARALLEL if route == "stacked" else _STAGE1_DISPATCH).inc()
+        self.planner.observe(plan, route, elapsed_s * 1e3)
+        if sp:
+            sp.set(stage1=label, planned=STAGE1_LABEL[plan.route])
+
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
-                     estimator: str = "plain"):
+                     estimator: str = "plain", *,
+                     approx_ok: Optional[ApproxContract] = None):
+        if estimator not in ("plain", "mle"):
+            raise ValueError(f"unknown estimator {estimator!r}")
         _check_top_k(top_k)
         with obs.span("index.query", metric="index.query_ms", kind="topk",
                       top_k=top_k, estimator=estimator, rows=qsk.n) as sp:
             segments = self._segments()
-            if self._fan_mesh is not None and estimator == "plain":
-                out = self._stacked_fan_topk(qsk, segments, top_k)
+            plan = self._plan("topk", estimator, approx_ok)
+            for route in plan.chain:
+                t0 = time.perf_counter()
+                out = self._run_topk_route(route, plan, qsk, segments, top_k)
                 if out is not None:
-                    self._last_stage1 = "parallel"
-                    _STAGE1_PARALLEL.inc()
-                    if sp:
-                        sp.set(stage1="parallel")
+                    self._note_route(plan, route, time.perf_counter() - t0,
+                                     sp)
                     return out
-            self._last_stage1 = "dispatch"
-            _STAGE1_DISPATCH.inc()
-            if sp:
-                sp.set(stage1="dispatch")
-            return sharded_fan_topk(qsk, segments, self.cfg, self.devices,
-                                    top_k=top_k, estimator=estimator,
-                                    engine=self.engine)
+            raise RuntimeError(  # dispatch is terminal: this cannot decline
+                f"no route served the query (plan: {plan.describe()})")
+
+    def _run_topk_route(self, route: str, plan: QueryPlan, qsk: LpSketch,
+                        segments, top_k: int):
+        """Execute one top-k route; None means this route declines (empty
+        stack, failed approx gate) and the plan's next fallback runs."""
+        if route == "stacked":
+            if plan.estimator == "plain":
+                return self._stacked_fan_topk(qsk, segments, top_k)
+            return self._stacked_fan_topk_mle(qsk, segments, top_k,
+                                              plan.approx)
+        return sharded_fan_topk(qsk, segments, self.cfg, self.devices,
+                                top_k=top_k, estimator=plan.estimator,
+                                engine=self.engine)
 
     # ------------------------------------------------- parallel stage-1 fan
 
@@ -797,11 +862,15 @@ class ShardedSketchIndex(SketchIndex):
         q = qsk.n
         n_live = sum(seg.live_count for seg in segments)
         k_out = min(top_k, n_live)
-        if k_out == 0:
-            return (jnp.zeros((q, 0), jnp.float32), np.zeros((q, 0), np.int64))
+        if k_out == 0 or q == 0:
+            # nothing to rank (or an empty batch): same shapes the
+            # single-host fan early-returns — never dispatch a 0-row
+            # shard_map program
+            return (jnp.zeros((q, k_out), jnp.float32),
+                    np.zeros((q, k_out), np.int64))
 
-        with obs.span("index.fan.stage1", mode="parallel",
-                      shards=len(shard_groups)):
+        with obs.span("index.fan.stage1", metric="index.stage1_parallel_ms",
+                      mode="parallel", shards=len(shard_groups)):
             st = self._stacked_operands(shard_groups, col_block)
             q_packed = _pack_query(qsk, self.cfg, "plain")
             Aq, nq = q_packed
@@ -837,28 +906,136 @@ class ShardedSketchIndex(SketchIndex):
             vals, idx = rerank_topk(cat_vals, cat_pos, k_out)
             return vals, _ids_for_positions(segments, np.asarray(idx))
 
+    def _stacked_mle_operands(self, st: _StackedOperands):
+        """Per-shard raw-sketch stacks (U (S, R, nvec, k), moments
+        (S, R, p-1)) for the approx mle fan, built lazily on the cached
+        operand snapshot — same key, lifetime, positions, and live mask as
+        the plain stacks."""
+        if st.Usk is None:
+            dax = self.data_axes
+            group_of = dict(st.groups)
+            parts_U, parts_M = [], []
+            for s in range(self.n_shards):
+                U_blk, M_blk = pack_shard_sketch_stack(
+                    group_of.get(s, []), st.rows, self.cfg, self.devices[s])
+                parts_U.append(U_blk[None])
+                parts_M.append(M_blk[None])
+            sh_U = NamedSharding(self._fan_mesh, P(dax, None, None, None))
+            sh_M = NamedSharding(self._fan_mesh, P(dax, None, None))
+            st.Usk = jax.make_array_from_single_device_arrays(
+                (self.n_shards,) + parts_U[0].shape[1:], sh_U, parts_U)
+            st.Msk = jax.make_array_from_single_device_arrays(
+                (self.n_shards,) + parts_M[0].shape[1:], sh_M, parts_M)
+        return st.Usk, st.Msk
+
+    def _stacked_fan_topk_mle(self, qsk: LpSketch, segments, top_k: int,
+                              contract: ApproxContract):
+        """Margin-MLE stage 1 on the stacked ``shard_map`` fan — the
+        ``approx_ok`` route.
+
+        mle's Newton strips are not bitwise stable under the stacked
+        re-tiling, so this route is tolerance-gated per operand snapshot:
+        the first query against a given stack ALSO computes the exact
+        dispatch answer and the snapshot is admitted only if every value
+        agrees within the contract (``within_tolerance``), turning the
+        measured ~2e-5 relative drift into an asserted bound.  A failed
+        gate is memoized and this route declines (returns None), so the
+        plan's dispatch fallback serves the stack from then on."""
+        backend, _, col_block = (self.engine or EngineConfig()).resolve()
+        groups, _ = _group_by_shard(segments, self.n_shards)
+        shard_groups = [(s, g) for s, g in groups if s is not None]
+        if not shard_groups:
+            return None  # no sealed shards: the dispatch fan is the fan
+        q = qsk.n
+        n_live = sum(seg.live_count for seg in segments)
+        k_out = min(top_k, n_live)
+        if k_out == 0 or q == 0:
+            return (jnp.zeros((q, k_out), jnp.float32),
+                    np.zeros((q, k_out), np.int64))
+
+        st = self._stacked_operands(shard_groups, col_block)
+        gate_key = ("mle_topk", st.key, contract)
+        gate = self.planner.gate_status(gate_key)
+        if gate is False:
+            return None  # this snapshot failed the contract: dispatch serves
+
+        with obs.span("index.fan.stage1", metric="index.stage1_parallel_ms",
+                      mode="parallel", estimator="mle",
+                      shards=len(shard_groups)):
+            Usk, Msk = self._stacked_mle_operands(st)
+            vals_sh, pos_sh = stacked_mle_topk_shards(
+                qsk.U, qsk.moments, Usk, Msk, self._stacked_mask(st), st.pos,
+                mesh=self._fan_mesh, cfg=self.cfg,
+                top_k=min(top_k, st.rows), col_block=col_block,
+                data_axes=self.data_axes)
+            # the local group (active segment + unplaced sealed blocks)
+            # folds through the exact per-segment mle strips as always
+            local_pending = [
+                _shard_candidates(qsk, None, grp, self.cfg, "mle", backend,
+                                  col_block, top_k, q)
+                for s, grp in groups if s is None
+            ]
+            vals_np = np.asarray(jax.device_get(vals_sh))
+            pos_np = np.asarray(jax.device_get(pos_sh))
+            local_vals = [np.asarray(jax.device_get(v))
+                          for v, _ in local_pending]
+            local_pos = [np.asarray(jax.device_get(i))
+                         for _, i in local_pending]
+        with obs.span("index.fan.stage2"):
+            cat_vals = np.concatenate(list(vals_np) + local_vals, axis=1)
+            cat_pos = np.concatenate(list(pos_np) + local_pos, axis=1)
+            k_out = _finite_k(cat_vals, k_out)
+            vals, idx = rerank_topk(cat_vals, cat_pos, k_out)
+            out = (vals, _ids_for_positions(segments, np.asarray(idx)))
+
+        if gate is None:
+            # calibrate ONCE per snapshot: the exact dispatch answer is the
+            # reference the contract is asserted against.  Sorted rows are
+            # 1-Lipschitz in the sup norm, so a per-value bound against the
+            # sorted reference is sound even if near-ties reorder.
+            ref_vals, _ref_ids = sharded_fan_topk(
+                qsk, segments, self.cfg, self.devices, top_k=top_k,
+                estimator="mle", engine=self.engine)
+            ok, drift = within_tolerance(
+                np.asarray(out[0]), np.asarray(ref_vals),
+                rtol=contract.rtol, atol=contract.atol)
+            self.planner.record_gate(gate_key, ok, drift)
+            if not ok:
+                return None  # fall back: dispatch recomputes (rare path)
+        return out
+
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
-                               estimator: str = "plain"):
+                               estimator: str = "plain",
+                               approx_ok: Optional[ApproxContract] = None):
+        if estimator not in ("plain", "mle"):
+            raise ValueError(f"unknown estimator {estimator!r}")
         with obs.span("index.query", metric="index.threshold_ms",
                       kind="threshold", estimator=estimator,
                       rows=qsk.n) as sp:
             segments = self._segments()
-            if self._fan_mesh is not None and estimator == "plain":
-                out = self._stacked_threshold(qsk, segments, radius, relative)
+            plan = self._plan("threshold", estimator, approx_ok)
+            for route in plan.chain:
+                t0 = time.perf_counter()
+                out = self._run_threshold_route(route, plan, qsk, segments,
+                                                radius, relative)
                 if out is not None:
-                    self._last_stage1 = "parallel"
-                    _STAGE1_PARALLEL.inc()
-                    if sp:
-                        sp.set(stage1="parallel")
+                    self._note_route(plan, route, time.perf_counter() - t0,
+                                     sp)
                     return out
-            self._last_stage1 = "dispatch"
-            _STAGE1_DISPATCH.inc()
-            if sp:
-                sp.set(stage1="dispatch")
-            return sharded_threshold_scan(
-                qsk, segments, self.cfg, self.devices, radius=radius,
-                relative=relative, estimator=estimator, engine=self.engine)
+            raise RuntimeError(
+                f"no route served the query (plan: {plan.describe()})")
+
+    def _run_threshold_route(self, route: str, plan: QueryPlan,
+                             qsk: LpSketch, segments, radius: float,
+                             relative: bool):
+        if route == "stacked":
+            # the planner never routes mle thresholds here (no stacked mle
+            # threshold scan exists) — plain only by construction
+            return self._stacked_threshold(qsk, segments, radius, relative)
+        return sharded_threshold_scan(
+            qsk, segments, self.cfg, self.devices, radius=radius,
+            relative=relative, estimator=plan.estimator, engine=self.engine)
 
     def _stacked_threshold(self, qsk: LpSketch, segments, radius: float,
                            relative: bool):
@@ -877,8 +1054,12 @@ class ShardedSketchIndex(SketchIndex):
         shard_groups = [(s, g) for s, g in groups if s is not None]
         if not shard_groups:
             return None
-        with obs.span("index.fan.stage1", mode="parallel",
-                      shards=len(shard_groups)):
+        if qsk.n == 0:
+            # empty batch: the merge of zero hits, same as the single-host
+            # scan — never dispatch a 0-row shard_map program
+            return _merge_threshold_hits([], [])
+        with obs.span("index.fan.stage1", metric="index.stage1_parallel_ms",
+                      mode="parallel", shards=len(shard_groups)):
             st = self._stacked_operands(shard_groups, col_block)
             q_packed = _pack_query(qsk, self.cfg, "plain")
             Aq, nq = q_packed

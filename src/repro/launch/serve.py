@@ -35,7 +35,12 @@ def main(argv=None):
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--trace", action="store_true",
                     help="enable span tracing + latency histograms; dumps "
-                         "the slow-query log after the KNN run")
+                         "the query plan and slow-query log after the KNN run")
+    ap.add_argument("--approx-ok", type=float, default=None, metavar="RTOL",
+                    help="opt the KNN queries into the planner's approximate "
+                         "contract with this relative tolerance (mle may then "
+                         "ride the stacked shard fan); default keeps the "
+                         "bit-exact route")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="expose /metrics (Prometheus text) and "
                          "/metrics.json on this port while serving")
@@ -50,7 +55,10 @@ def main(argv=None):
 
     if args.knn:
         from repro.core import SketchConfig
+        from repro.index import ApproxContract
         svc = SketchKnnService(SketchConfig(p=4, k=128, block_d=512))
+        approx = (ApproxContract(rtol=args.approx_ok)
+                  if args.approx_ok is not None else None)
         corpus = jax.random.uniform(jax.random.key(0),
                                     (args.corpus_rows, args.dims))
         t0 = time.perf_counter()
@@ -58,13 +66,16 @@ def main(argv=None):
         t1 = time.perf_counter()
         queries = corpus[:args.queries] + 0.01 * jax.random.normal(
             jax.random.key(1), (args.queries, args.dims))
-        d, idx = svc.query(queries, top_k=5, mle=True)
+        d, idx = svc.query(queries, top_k=5, mle=True, approx_ok=approx)
         t2 = time.perf_counter()
         hit = float(jnp.mean((idx[:, 0] == jnp.arange(args.queries))))
         print(f"ingest {args.corpus_rows}x{args.dims}: {t1-t0:.2f}s; "
               f"query {args.queries}: {t2-t1:.2f}s; top1 self-recall {hit:.2f}")
         print("nn dists:", [round(float(x), 5) for x in d[:, 0]])
         if args.trace:
+            plan = svc.index.planner.last_plan
+            if plan is not None:
+                print(f"query plan: {plan.describe()}")
             dump = obs.GLOBAL_SLOW_LOG.dump()
             if dump:
                 print("slow queries:")

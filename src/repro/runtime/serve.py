@@ -94,12 +94,17 @@ class SketchKnnService:
     def delete(self, row_ids) -> int:
         return self.index.delete(row_ids)
 
-    def query(self, rows: jax.Array, top_k: int = 10, mle: bool = False):
+    def query(self, rows: jax.Array, top_k: int = 10, mle: bool = False,
+              approx_ok=None):
+        """``approx_ok`` (an ``repro.index.ApproxContract``) opts the query
+        into planner-gated approximate routes (mle on the stacked fan);
+        ``None`` keeps the bit-exact default contract."""
         if self.index.n_live == 0:
             raise RuntimeError("empty corpus")
         qs = jnp.asarray(rows)
         return self.index.query(qs, top_k=top_k,
-                                estimator="mle" if mle else "plain")
+                                estimator="mle" if mle else "plain",
+                                approx_ok=approx_ok)
 
     def save(self, path: str) -> str:
         return self.index.save(path)

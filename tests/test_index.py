@@ -440,8 +440,8 @@ def test_micro_batcher_flush_survives_errors(rng):
                threading.Thread(target=worker, args=(1, "plain"))]
     for t in threads:
         t.start()
-    while mb._groups.get((2, "plain")) is None or \
-            mb._groups.get((2, "bogus")) is None:
+    while mb._groups.get((2, "plain", None)) is None or \
+            mb._groups.get((2, "bogus", None)) is None:
         pass  # wait until both requests joined their groups
     mb.flush()  # must run the good batch despite the poisoned one
     for t in threads:

@@ -1,0 +1,442 @@
+"""QueryPlanner routing contracts: the route table, the approx_ok gate, the
+planned-vs-actual ledger, and the serving invariants the planner must keep.
+
+Three contracts pin everything here:
+
+  * default plans are bit-exact — the planner may only pick routes whose
+    answers are bit-identical to the single-host index;
+  * ``approx_ok`` is an opt-in asserted bound — mle rides the stacked fan
+    only after the conformance gate proves this operand snapshot agrees with
+    the exact dispatch answer within (rtol, atol), and a failed gate pins
+    the snapshot back to dispatch;
+  * ``stats()["stage1"]`` reports the last OBSERVED route per estimator (a
+    planner prediction only fills the pre-query gap) — the misreport this
+    replaces claimed "parallel" forever once a mesh existed, even after
+    every sealed segment drained away.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import engine
+from repro.core import SketchConfig
+from repro.core.sketch import sketch as sketch_rows
+from repro.index import (
+    ApproxContract,
+    IndexConfig,
+    MicroBatcher,
+    QueryPlanner,
+    ShardedSketchIndex,
+    SketchIndex,
+)
+from repro.index.planner import STAGE1_LABEL
+from repro.index.sharded import sharded_fan_topk, sharded_threshold_scan
+from repro.launch.mesh import make_serving_mesh
+
+CFG = SketchConfig(p=4, k=32, block_d=64)
+D = 256
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(29)
+
+
+def _pair(rng, n=200, capacity=32, seed=3):
+    X = rng.uniform(0, 1, (n, D)).astype(np.float32)
+    icfg = IndexConfig(segment_capacity=capacity)
+    ref = SketchIndex(CFG, seed=seed, index_cfg=icfg)
+    sh = ShardedSketchIndex(CFG, seed=seed, index_cfg=icfg,
+                            mesh=make_serving_mesh(1))
+    ids_r = ref.ingest(jnp.asarray(X))
+    ids_s = sh.ingest(jnp.asarray(X))
+    np.testing.assert_array_equal(ids_r, ids_s)
+    return ref, sh, X, ids_r
+
+
+# ------------------------------------------------------------- route table
+
+
+# (reduce, estimator, sharded, mesh, approx) -> (route, fallbacks)
+_ROUTE_TABLE = [
+    ("topk", "plain", False, False, None, "dense", ()),
+    ("topk", "mle", False, False, None, "dense", ()),
+    ("threshold", "plain", False, False, None, "dense", ()),
+    ("threshold", "mle", False, False, None, "dense", ()),
+    # sharded without a usable mesh: dispatch, no fallback needed
+    ("topk", "plain", True, False, None, "dispatch", ()),
+    ("topk", "mle", True, False, None, "dispatch", ()),
+    ("threshold", "plain", True, False, None, "dispatch", ()),
+    ("topk", "mle", True, False, ApproxContract(), "dispatch", ()),
+    # mesh present: plain stacks, mle pins to dispatch unless approx_ok
+    ("topk", "plain", True, True, None, "stacked", ("dispatch",)),
+    ("threshold", "plain", True, True, None, "stacked", ("dispatch",)),
+    ("topk", "mle", True, True, None, "dispatch", ()),
+    ("threshold", "mle", True, True, None, "dispatch", ()),
+    ("topk", "mle", True, True, ApproxContract(), "stacked", ("dispatch",)),
+    # no stacked mle threshold scan exists, contract or not
+    ("threshold", "mle", True, True, ApproxContract(), "dispatch", ()),
+]
+
+
+@pytest.mark.parametrize(
+    "reduce,estimator,sharded,mesh,approx,route,fallbacks", _ROUTE_TABLE)
+def test_route_selection_table(reduce, estimator, sharded, mesh, approx,
+                               route, fallbacks):
+    for sealed in (0, 1, 7):
+        plan = QueryPlanner().plan(
+            reduce=reduce, estimator=estimator, sharded=sharded,
+            mesh_available=mesh, sealed_segments=sealed, approx_ok=approx)
+        # sealed count is advisory: capability decides the route (the
+        # executor declines an empty stack and the fallback chain serves)
+        assert (plan.route, plan.fallbacks) == (route, fallbacks), \
+            f"sealed={sealed}: {plan.describe()}"
+        assert plan.chain == (route,) + fallbacks
+        assert plan.approx is approx
+        assert plan.reason
+    # only approx plans carry a contract downstream
+    assert (plan.approx is not None) == (approx is not None)
+
+
+def test_plan_validation():
+    p = QueryPlanner()
+    with pytest.raises(ValueError):
+        p.plan(reduce="sum", estimator="plain", sharded=False)
+    with pytest.raises(ValueError):
+        p.plan(reduce="topk", estimator="exact", sharded=False)
+    with pytest.raises(TypeError):
+        p.plan(reduce="topk", estimator="mle", sharded=True,
+               mesh_available=True, approx_ok=1e-4)  # raw float, not contract
+    with pytest.raises(ValueError):
+        ApproxContract(rtol=-1e-4)
+    with pytest.raises(ValueError):
+        ApproxContract(atol=float("nan"))
+    with pytest.raises(ValueError):
+        QueryPlanner(alpha=0.0)
+
+
+def test_record_false_is_read_only():
+    """stats()'s route prediction must never count as a planned query."""
+    p = QueryPlanner()
+    p.plan(reduce="topk", estimator="plain", sharded=True,
+           mesh_available=True, record=False)
+    assert p.stats()["planned"] == {}
+    assert p.last_plan is None
+    plan = p.plan(reduce="topk", estimator="plain", sharded=True,
+                  mesh_available=True)
+    assert p.stats()["planned"] == {"stacked": 1}
+    assert p.last_plan is plan
+
+
+# -------------------------------------------------------------- cost model
+
+
+def test_cost_model_flips_route_only_past_hysteresis():
+    p = QueryPlanner(alpha=1.0)  # EWMA == last sample: deterministic costs
+
+    def feed(route, ms, n):
+        plan = p.plan(reduce="topk", estimator="plain", sharded=True,
+                      mesh_available=True, record=False)
+        for _ in range(n):
+            p.observe(plan, route, ms)
+
+    # within the hysteresis band (1.5x): the static stacked preference holds
+    feed("stacked", 10.0, p.min_samples)
+    feed("dispatch", 8.0, p.min_samples)
+    plan = p.plan(reduce="topk", estimator="plain", sharded=True,
+                  mesh_available=True)
+    assert plan.route == "stacked"
+    assert plan.expected_cost_ms == pytest.approx(10.0)
+
+    # decisively cheaper dispatch: the plan flips, stacked demotes to fallback
+    feed("stacked", 20.0, 1)
+    plan = p.plan(reduce="topk", estimator="plain", sharded=True,
+                  mesh_available=True)
+    assert (plan.route, plan.fallbacks) == ("dispatch", ("stacked",))
+    assert "cost model" in plan.reason
+    assert plan.expected_cost_ms == pytest.approx(8.0)
+
+    # cost samples are keyed per (reduce, estimator, route): the plain
+    # samples above must not leak into mle or threshold planning
+    assert p.expected_cost_ms("topk", "mle", "dispatch") is None
+    mplan = p.plan(reduce="threshold", estimator="plain", sharded=True,
+                   mesh_available=True)
+    assert mplan.route == "stacked"
+
+
+def test_observe_keeps_planned_vs_actual_ledger():
+    p = QueryPlanner()
+    plan = p.plan(reduce="topk", estimator="plain", sharded=True,
+                  mesh_available=True)
+    p.observe(plan, "dispatch", 5.0)  # the stack declined; dispatch served
+    s = p.stats()
+    assert s["planned"] == {"stacked": 1}
+    assert s["actual"] == {"dispatch": 1}
+    assert s["fallbacks"] == 1
+    p.observe(p.plan(reduce="topk", estimator="plain", sharded=True,
+                     mesh_available=True), "stacked", 5.0)
+    s = p.stats()
+    assert s["actual"] == {"dispatch": 1, "stacked": 1}
+    assert s["fallbacks"] == 1
+
+
+# ------------------------------------------------- serving through the plan
+
+
+def test_default_plans_reproduce_single_host_answers(rng):
+    """The bit-exactness contract: every default-plan route must reproduce
+    the single-host index bit-for-bit — values AND tie-broken ids."""
+    ref, sh, X, _ids = _pair(rng)
+    Q = jnp.asarray(X[:6])
+    for estimator in ("plain", "mle"):
+        d0, i0 = ref.query(Q, top_k=9, estimator=estimator)
+        d1, i1 = sh.query(Q, top_k=9, estimator=estimator)
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1),
+                                      err_msg=estimator)
+        np.testing.assert_array_equal(i0, i1, err_msg=estimator)
+        for relative in (False, True):
+            t0 = ref.query_threshold(Q, radius=0.12, relative=relative,
+                                     estimator=estimator)
+            t1 = sh.query_threshold(Q, radius=0.12, relative=relative,
+                                    estimator=estimator)
+            np.testing.assert_array_equal(t0[0], t1[0])
+            np.testing.assert_array_equal(t0[1], t1[1])
+    s = sh.stats()
+    assert s["stage1"]["plain"] == "parallel"
+    assert s["stage1"]["mle"] == "dispatch"
+    # every query was served by the route its plan chose: no fallbacks
+    assert s["planner"]["fallbacks"] == 0
+    assert (sum(s["planner"]["planned"].values())
+            == sum(s["planner"]["actual"].values()) == 6)
+
+
+def test_approx_mle_rides_stacked_fan_within_contract(rng):
+    ref, sh, X, _ids = _pair(rng)
+    Q = jnp.asarray(X[:6])
+    contract = ApproxContract()
+    want_d, want_i = ref.query(Q, top_k=9, estimator="mle")
+    got_d, got_i = sh.query(Q, top_k=9, estimator="mle", approx_ok=contract)
+
+    s = sh.stats()
+    assert s["stage1"]["mle"] == "parallel"  # observed, not predicted
+    gates = s["planner"]["approx_gates"]
+    assert len(gates) == 1 and gates[0]["ok"]
+    # the gate's measured drift IS the asserted bound
+    assert gates[0]["max_rel_drift"] <= contract.rtol
+    err = np.abs(np.asarray(got_d) - np.asarray(want_d))
+    assert (err <= contract.atol
+            + contract.rtol * np.abs(np.asarray(want_d))).all()
+
+    # the gate is memoized per snapshot: a second query must not re-run the
+    # dual computation (gate list stays length 1) and still serves stacked
+    sh.query(Q, top_k=9, estimator="mle", approx_ok=contract)
+    s = sh.stats()
+    assert len(s["planner"]["approx_gates"]) == 1
+    assert s["stage1"]["mle"] == "parallel"
+    # bit-exactness stays the default: the same query without the contract
+    # goes back to dispatch and the exact answer
+    d2, i2 = sh.query(Q, top_k=9, estimator="mle")
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(want_d))
+    np.testing.assert_array_equal(i2, want_i)
+    assert sh.stats()["stage1"]["mle"] == "dispatch"
+
+
+def test_failed_approx_gate_pins_snapshot_to_dispatch(rng):
+    """A snapshot that failed its conformance gate must serve via dispatch —
+    exactly, with the fallback counted — until the snapshot changes."""
+    ref, sh, X, _ids = _pair(rng, n=120)
+    Q = jnp.asarray(X[:4])
+    contract = ApproxContract(rtol=1e-6, atol=0.0)
+    sh.query(Q, top_k=5)  # build the stacked operand snapshot
+    assert sh._stack is not None
+    # pin a failing verdict for this exact snapshot + contract
+    sh.planner.record_gate(("mle_topk", sh._stack.key, contract),
+                           False, 0.5)
+
+    before = sh.stats()["planner"]["fallbacks"]
+    d, i = sh.query(Q, top_k=5, estimator="mle", approx_ok=contract)
+    want_d, want_i = ref.query(Q, top_k=5, estimator="mle")
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(want_d))
+    np.testing.assert_array_equal(i, want_i)
+    s = sh.stats()
+    assert s["stage1"]["mle"] == "dispatch"
+    assert s["planner"]["fallbacks"] == before + 1
+    # a different contract is a different gate: it calibrates fresh and
+    # (passing) serves from the stacked fan
+    sh.query(Q, top_k=5, estimator="mle", approx_ok=ApproxContract())
+    assert sh.stats()["stage1"]["mle"] == "parallel"
+
+
+# ----------------------------------------------------- stage1 stats honesty
+
+
+def test_stage1_stats_flip_when_sealed_segments_drain(rng):
+    """The misreport this PR fixes: stats()["stage1"]["plain"] claimed
+    "parallel" forever once a mesh existed, even after deletes + compaction
+    drained every sealed segment and queries actually dispatched."""
+    ref, sh, X, ids = _pair(rng, n=96)
+    Q = jnp.asarray(X[:3])
+    sh.query(Q, top_k=5)
+    assert sh.stats()["stage1"]["plain"] == "parallel"
+
+    # drain: tombstone every sealed row, compact the carcasses away
+    sh.delete(ids)
+    ref.delete(ids)
+    sh.compact()
+    ref.compact()
+    assert sh.stats()["sealed_segments"] == 0
+
+    d, i = sh.query(Q, top_k=5)
+    d0, i0 = ref.query(Q, top_k=5)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d0))
+    np.testing.assert_array_equal(i, i0)
+    s = sh.stats()
+    # the stacked fan declined (nothing sealed), dispatch served — and the
+    # stats say so instead of parroting the mesh capability
+    assert s["stage1"]["plain"] == "dispatch"
+    assert s["stage1"]["last"] == "dispatch"
+    assert s["planner"]["fallbacks"] >= 1
+
+    # refill: the next sealed segments bring the stacked fan (and the
+    # observed stats) back
+    sh.ingest(jnp.asarray(X))
+    sh.query(Q, top_k=5)
+    assert sh.stats()["stage1"]["plain"] == "parallel"
+
+
+def test_planner_prediction_fills_pre_query_gap(rng):
+    sh = ShardedSketchIndex(CFG, seed=1,
+                            index_cfg=IndexConfig(segment_capacity=32),
+                            mesh=make_serving_mesh(1))
+    s = sh.stats()
+    # nothing observed yet: stats report the planner's prediction, and the
+    # prediction is capability-based (the mesh makes stacked possible)
+    assert s["stage1"] == {"plain": "parallel", "mle": "dispatch",
+                           "last": None}
+    assert s["planner"]["planned"] == {}  # predictions never count
+
+
+# ----------------------------------------------------------- zero-row rows
+
+
+def test_zero_row_queries_short_circuit_every_route(rng):
+    _ref, sh, X, _ids = _pair(rng, n=96)
+    empty = np.zeros((0, D), np.float32)
+
+    for estimator, approx in (("plain", None), ("mle", None),
+                              ("mle", ApproxContract())):
+        d, i = sh.query(empty, top_k=5, estimator=estimator,
+                        approx_ok=approx)
+        assert np.asarray(d).shape == (0, 5) and i.shape == (0, 5), estimator
+    # the stacked route itself served the empty batch (no fallback churn,
+    # no 0-row shard_map program dispatched)
+    assert sh.stats()["stage1"]["last"] == "parallel"
+
+    rr, ii = sh.query_threshold(empty, radius=0.5)
+    assert rr.shape == (0,) and ii.shape == (0,)
+    assert sh.stats()["stage1"]["last"] == "parallel"
+
+    # 0-row also composes with k > live and an estimator change mid-stream
+    d, i = sh.query(empty, top_k=10 ** 6)
+    assert np.asarray(d).shape[0] == 0
+
+
+def test_microbatcher_threads_approx_ok_and_empty_requests(rng):
+    ref, sh, X, _ids = _pair(rng, n=96)
+    b = MicroBatcher(sh, max_batch=4, max_wait_ms=1.0)
+
+    # an empty request answers immediately, never joining a batch
+    d, i = b.query(np.zeros((0, D), np.float32), top_k=3)
+    assert np.asarray(d).shape == (0, 3) and i.shape == (0, 3)
+    assert b.batches_run == 0
+
+    # approx_ok is part of the batch key and reaches the index: the batched
+    # answer matches the direct stacked-fan answer for the same contract
+    contract = ApproxContract()
+    want = sh.query(jnp.asarray(X[:2]), top_k=5, estimator="mle",
+                    approx_ok=contract)
+    got = b.query(X[:2], top_k=5, estimator="mle", approx_ok=contract)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(got[1], want[1])
+    assert sh.stats()["stage1"]["mle"] == "parallel"
+    # distinct contracts form distinct groups (no open-group merge)
+    b.query(X[:1], top_k=5, estimator="mle")
+    assert sh.stats()["stage1"]["mle"] == "dispatch"
+
+
+# ------------------------------------------- relative-threshold f32 contract
+
+
+def test_relative_threshold_tie_with_float64_radius(rng):
+    """The relative-threshold comparison is a float32 contract on EVERY
+    route.  A radius arriving as np.float64 is "strong" under NEP 50 — an
+    uncast host comparison would promote to float64 and flip pairs sitting
+    bit-exactly AT the scaled radius (the engine path did exactly that)."""
+    ref, sh, X, ids = _pair(rng, n=150, seed=13)
+    Q = jnp.asarray(X[:5])
+    ref.delete(ids[20:50])
+    sh.delete(ids[20:50])
+
+    live = np.ones(len(ids), bool)
+    live[20:50] = False
+    live_ids = ids[live]
+    qsk = sketch_rows(Q, ref.key, CFG)
+    live_sk = ref.live_sketch()
+    dense = np.asarray(engine.pairwise(qsk, live_sk, CFG, reduce="full"))
+    scale = (np.asarray(qsk.norm_pp(CFG.p))[:, None]
+             + np.asarray(live_sk.norm_pp(CFG.p))[None, :])
+    # a pair whose float32 ratio reproduces its distance exactly: a real tie
+    # AT the boundary, excluded by the strict < on every float32 path — but
+    # ratio * scale in float64 can land strictly below the float64 product,
+    # which is what an uncast comparison would include
+    ratios = (dense / scale).astype(np.float32)
+    exact = (ratios * scale == dense) & (dense > 0)
+    assert exact.any()
+    i, j = map(int, np.argwhere(exact)[0])
+    radius = np.float64(ratios[i, j])  # the hostile dtype, on purpose
+    want_hit = dense < np.float32(radius) * scale
+    assert not want_hit[i, j]
+    want_r, want_c = np.nonzero(want_hit)
+    want_ids = live_ids[want_c]
+
+    er, ec = engine.pairwise(qsk, live_sk, CFG, reduce="threshold",
+                             radius=radius, relative=True)
+    qsk_s = sketch_rows(Q, sh.key, CFG)
+    got = {
+        "dense-engine": (er, live_ids[ec]),
+        "single-host": ref.query_threshold(Q, radius=radius, relative=True),
+        "stacked-fan": sh.query_threshold(Q, radius=radius, relative=True),
+        "dispatch": sharded_threshold_scan(
+            qsk_s, sh._segments(), sh.cfg, sh.devices, radius=radius,
+            relative=True, engine=sh.engine),
+    }
+    assert sh.stats()["stage1"]["last"] == "parallel"
+    for tag, (rr, ii) in got.items():
+        np.testing.assert_array_equal(rr, want_r, err_msg=tag)
+        np.testing.assert_array_equal(ii, want_ids, err_msg=tag)
+
+
+# -------------------------------------------------------------- obs counters
+
+
+def test_planner_span_reports_planned_vs_served(rng):
+    """Under tracing, the query span carries both the planned and the served
+    stage-1 mode — the planned-vs-actual readout at per-query granularity."""
+    _ref, sh, X, ids = _pair(rng, n=96)
+    Q = jnp.asarray(X[:3])
+    sh.delete(ids)
+    sh.compact()  # drain: plans say stacked, dispatch serves
+    from repro import obs
+    roots = []
+    obs.enable()
+    obs.trace.add_sink(roots.append)
+    try:
+        sh.query(Q, top_k=5)
+    finally:
+        obs.trace.remove_sink(roots.append)
+        obs.disable()
+    iq = [s for s in roots if s.name == "index.query"]
+    assert iq, [s.name for s in roots]
+    assert iq[-1].attrs["planned"] == "parallel"
+    assert iq[-1].attrs["stage1"] == "dispatch"
