@@ -31,6 +31,12 @@ Emits the harness CSV rows (name,us_per_call,derived):
                       interleaved min-of-reps and is asserted <= 1.10 inside
                       this module (hardware-independent), so the CI smoke
                       fails if the observability layer stops being ~free
+  front_door          us per fully-scheduled query through the SLO front
+                      door (admission + deadline + micro-batch + 2-replica
+                      routing), derived = p50_ms|admitted|shed|replicas —
+                      answers are asserted bit-identical to the bare index
+                      and one starved tenant must shed with a typed
+                      Overloaded before timing starts
   rebalance           us per skew-healing migration pass (skewed corpus:
                       heavy deletes on most shards, compact, rebalance),
                       derived = moved|skew_before|skew_after
@@ -137,6 +143,38 @@ def run():
         f"the obs layer must stay ~free")
     rows.append(("obs_overhead", us_on,
                  f"ratio={ratio:.3f}|off_us={us_off:.0f}"))
+
+    # the SLO front door end to end: admission -> deadline -> micro-batch ->
+    # replica lane, on the same corpus.  Answers are asserted bit-identical
+    # to the bare index first (the scheduler must never change results),
+    # then the row times fully-scheduled queries under a generous deadline;
+    # one deliberately starved tenant proves the typed-shedding path costs
+    # (and serves) nothing
+    from repro.serve import FrontDoor, Overloaded, TenantQuota
+
+    fd = FrontDoor(index, n_replicas=2, max_wait_ms=1.0,
+                   tenant_quotas={"starved": TenantQuota(rate=1e-6,
+                                                         burst=1e-3)})
+    want = index.query(Q, top_k=top_k)
+    got = fd.query(np.asarray(Q), top_k=top_k, deadline_ms=60_000.0)  # warmup
+    assert np.array_equal(np.asarray(want[0]), np.asarray(got[0]))
+    assert np.array_equal(want[1], got[1])
+    try:
+        fd.query(np.asarray(Q), top_k=top_k, tenant="starved")
+        raise AssertionError("starved tenant must shed, not serve")
+    except Overloaded as e:
+        assert e.reason == "quota" and e.retry_after_ms > 0
+    lat = []
+    for _ in range(3 if TINY else 10):
+        t0 = time.perf_counter()
+        fd.query(np.asarray(Q), top_k=top_k, deadline_ms=60_000.0)
+        lat.append((time.perf_counter() - t0) * 1e3)
+    p50f = float(np.percentile(np.asarray(lat), 50))
+    sched = fd.stats()["scheduler"]
+    assert sched["shed"] == 1 and sched["deadline_exceeded"] == 0
+    rows.append(("front_door", p50f * 1e3,
+                 f"p50_ms={p50f:.2f}|admitted={sched['admitted']}"
+                 f"|shed={sched['shed']}|replicas=2"))
 
     if _mesh_enabled():
         # sharded smoke: same corpus spread over the 1xN serving mesh via

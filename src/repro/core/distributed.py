@@ -40,6 +40,7 @@ __all__ = [
     "stacked_mle_topk_shards",
     "stacked_threshold_shards",
     "mesh_shard_devices",
+    "mesh_replica_devices",
 ]
 
 
@@ -63,6 +64,32 @@ def mesh_shard_devices(mesh: Mesh, data_axes: Sequence[str] | str = "data"):
     arr = np.transpose(mesh.devices, perm)
     n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
     return list(arr.reshape(n_shards, -1)[:, 0])
+
+
+def mesh_replica_devices(mesh: Mesh, *, replica_axis: str = "replica",
+                         data_axes: Sequence[str] | str = "data"):
+    """Per-replica ordered shard-device lists for a serving mesh.
+
+    Returns ``[devices_of_replica_0, devices_of_replica_1, ...]`` where each
+    entry is the ``mesh_shard_devices``-ordered device list of one row of
+    the ``replica`` axis — replica r's shard i lands on ``out[r][i]``.
+    Queries go to exactly one replica, so each row is an independent serving
+    plane (``repro.serve.ReplicaSet`` builds one lane per row); there is no
+    cross-replica collective anywhere in the serving stack.  A mesh without
+    a replica axis is one replica."""
+    names = list(mesh.axis_names)
+    if replica_axis not in names:
+        return [mesh_shard_devices(mesh, data_axes)]
+    data_axes = _tuple(data_axes)
+    perm = ([names.index(replica_axis)]
+            + [names.index(a) for a in data_axes]
+            + [i for i, n in enumerate(names)
+               if n != replica_axis and n not in data_axes])
+    arr = np.transpose(mesh.devices, perm)
+    n_rep = mesh.shape[replica_axis]
+    n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+    arr = arr.reshape(n_rep, n_shards, -1)
+    return [list(arr[r, :, 0]) for r in range(n_rep)]
 
 
 def sketch_sharded(

@@ -24,6 +24,10 @@ route (dense / dispatch fan / stacked fan) from capabilities and measured
 per-route cost, and ``ApproxContract`` opts a query into tolerance-gated
 approximate routes (mle on the stacked fan) — the default contract stays
 bit-exact.
+
+Scheduling (deadlines, tenant quotas, load shedding, replica fan-out)
+lives one layer up in ``repro.serve`` — the index layer never rejects or
+drops work.
 """
 
 from .planner import ApproxContract, QueryPlan, QueryPlanner

@@ -101,6 +101,14 @@ class ApproxContract:
     the ~2e-5 relative drift measured for the stacked margin-MLE fold, with
     ``atol`` absorbing clipped near-zero distances (0.0 vs tiny-positive
     flips under re-tiling).
+
+    Example (opt an mle top-k onto the stacked fan)::
+
+        >>> from repro.index.planner import ApproxContract
+        >>> contract = ApproxContract(rtol=1e-4, atol=1e-5)
+        >>> # index.query(X, estimator="mle", approx_ok=contract)
+        >>> contract.rtol
+        0.0001
     """
 
     rtol: float = 1e-4
@@ -119,7 +127,25 @@ class ApproxContract:
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
     """An explicit routing decision: what to run, what to fall back to,
-    what it is expected to cost, and why."""
+    what it is expected to cost, and why.
+
+    ``deadline_ms`` carries the caller's remaining latency budget when the
+    request arrived through the SLO front door (``repro.serve``); routes are
+    allowed to consult it (see the deadline flip in :meth:`QueryPlanner.plan`)
+    but never to drop work — load shedding happens in the front door with a
+    typed rejection, not here.  ``replica`` records which serving replica the
+    front door routed this query to (None outside a replicated deployment).
+
+    Example::
+
+        >>> from repro.index.planner import QueryPlanner
+        >>> plan = QueryPlanner().plan(reduce="topk", estimator="plain",
+        ...                            sharded=False)
+        >>> plan.route
+        'dense'
+        >>> plan.chain
+        ('dense',)
+    """
 
     reduce: str
     estimator: str
@@ -128,6 +154,8 @@ class QueryPlan:
     expected_cost_ms: Optional[float] = None
     reason: str = ""
     approx: Optional[ApproxContract] = None
+    deadline_ms: Optional[float] = None
+    replica: Optional[int] = None
 
     @property
     def chain(self) -> Tuple[str, ...]:
@@ -138,8 +166,13 @@ class QueryPlan:
         cost = (f"{self.expected_cost_ms:.2f}ms"
                 if self.expected_cost_ms is not None else "unknown")
         fb = ",".join(self.fallbacks) or "-"
-        return (f"route={self.route} fallbacks={fb} expected_cost={cost} "
-                f"reason={self.reason}")
+        out = (f"route={self.route} fallbacks={fb} expected_cost={cost} "
+               f"reason={self.reason}")
+        if self.deadline_ms is not None:
+            out += f" deadline={self.deadline_ms:g}ms"
+        if self.replica is not None:
+            out += f" replica={self.replica}"
+        return out
 
 
 class QueryPlanner:
@@ -148,6 +181,18 @@ class QueryPlanner:
     One instance per index (created by ``SketchIndex.__init__``), so cost
     samples never leak between corpora.  All methods are thread-safe — the
     batcher's flusher threads plan and observe concurrently.
+
+    Example (plan → execute → feed the cost model)::
+
+        >>> from repro.index.planner import QueryPlanner
+        >>> p = QueryPlanner()
+        >>> plan = p.plan(reduce="topk", estimator="plain", sharded=True,
+        ...               mesh_available=True)
+        >>> plan.chain                     # executors walk this in order
+        ('stacked', 'dispatch')
+        >>> p.observe(plan, "stacked", 4.2)   # served by stacked in 4.2ms
+        >>> p.stats()["actual"]
+        {'stacked': 1}
     """
 
     # a measured route displaces the static preference only when it is
@@ -177,6 +222,8 @@ class QueryPlanner:
              mesh_available: bool = False,
              sealed_segments: Optional[int] = None,
              approx_ok: Optional[ApproxContract] = None,
+             deadline_ms: Optional[float] = None,
+             replica: Optional[int] = None,
              record: bool = True) -> QueryPlan:
         """Pick a route for one query.
 
@@ -187,6 +234,13 @@ class QueryPlanner:
         serves.  ``record=False`` is the read-only form (``stats()``
         predicting the route an unobserved estimator would take) — it must
         not count as a planned query.
+
+        ``deadline_ms`` is the caller's remaining budget (from the serving
+        front door).  It can flip the static stacked preference to dispatch
+        when the cost model has measured both routes and only dispatch fits
+        the budget — a deterministic, explainable flip (the reason names the
+        deadline), never a silent drop.  ``replica`` is stamped onto the
+        plan for observability; it does not change the route.
         """
         if reduce not in REDUCES:
             raise ValueError(f"unknown reduce {reduce!r} (want {REDUCES})")
@@ -198,23 +252,35 @@ class QueryPlanner:
                 "approx_ok must be an ApproxContract (or None for the "
                 f"bit-exact default), got {type(approx_ok).__name__}")
 
+        if deadline_ms is not None and not (
+                isinstance(deadline_ms, (int, float))
+                and math.isfinite(deadline_ms) and deadline_ms > 0):
+            raise ValueError(
+                f"deadline_ms must be a finite float > 0, got {deadline_ms!r}"
+                " (expired budgets are rejected by the front door, never "
+                "planned)")
+
         if not sharded:
             plan = self._mk(reduce, estimator, "dense", (), approx_ok,
-                            "single-host index: the dense fan is the route")
+                            "single-host index: the dense fan is the route",
+                            deadline_ms, replica)
         elif not mesh_available:
             plan = self._mk(reduce, estimator, "dispatch", (), approx_ok,
                             "no usable serving mesh: the stacked fan needs "
-                            "one distinct device per shard")
+                            "one distinct device per shard",
+                            deadline_ms, replica)
         elif estimator == "mle" and approx_ok is None:
             plan = self._mk(reduce, estimator, "dispatch", (), approx_ok,
                             "mle is pinned to the exact dispatch strips — "
                             "its Newton solves are not bitwise stable under "
                             "the stacked re-tiling (pass approx_ok to opt "
-                            "into the stacked fan)")
+                            "into the stacked fan)",
+                            deadline_ms, replica)
         elif estimator == "mle" and reduce == "threshold":
             plan = self._mk(reduce, estimator, "dispatch", (), approx_ok,
                             "no stacked mle threshold scan exists; dispatch "
-                            "serves mle thresholds regardless of approx_ok")
+                            "serves mle thresholds regardless of approx_ok",
+                            deadline_ms, replica)
         else:
             # stacked is eligible (plain always; mle top-k under approx_ok,
             # tolerance-gated downstream).  Dispatch stays in the chain: the
@@ -235,8 +301,21 @@ class QueryPlanner:
                 route, fallbacks = "dispatch", ("stacked",)
                 reason = (f"cost model: dispatch EWMA {cd:.2f}ms beats "
                           f"stacked {cs:.2f}ms by >= {self.hysteresis:g}x")
+            elif deadline_ms is not None:
+                # the deadline flip skips the hysteresis band on purpose:
+                # an explicit budget outranks routing stability, but both
+                # routes must be measured — a guess is not a reason to leave
+                # the statically-preferred (and usually faster) stacked fan
+                fits = self._deadline_prefers_dispatch(reduce, estimator,
+                                                       deadline_ms)
+                if fits:
+                    cs, cd = fits
+                    route, fallbacks = "dispatch", ("stacked",)
+                    reason = (f"deadline {deadline_ms:g}ms: stacked EWMA "
+                              f"{cs:.2f}ms exceeds the budget, dispatch "
+                              f"{cd:.2f}ms fits")
             plan = self._mk(reduce, estimator, route, fallbacks, approx_ok,
-                            reason)
+                            reason, deadline_ms, replica)
         if record:
             with self._lock:
                 self._planned[plan.route] = (
@@ -245,12 +324,14 @@ class QueryPlanner:
             _PLANNED[plan.route].inc()
         return plan
 
-    def _mk(self, reduce, estimator, route, fallbacks, approx, reason):
+    def _mk(self, reduce, estimator, route, fallbacks, approx, reason,
+            deadline_ms=None, replica=None):
         return QueryPlan(reduce=reduce, estimator=estimator, route=route,
                          fallbacks=tuple(fallbacks),
                          expected_cost_ms=self.expected_cost_ms(
                              reduce, estimator, route),
-                         reason=reason, approx=approx)
+                         reason=reason, approx=approx,
+                         deadline_ms=deadline_ms, replica=replica)
 
     def _cost_prefers_dispatch(self, reduce, estimator):
         """(stacked_ms, dispatch_ms) when measured cost decisively favors
@@ -264,6 +345,22 @@ class QueryPlanner:
                 return None
             cs, cd = self._cost[ks], self._cost[kd]
         if cs > self.hysteresis * cd:
+            return cs, cd
+        return None
+
+    def _deadline_prefers_dispatch(self, reduce, estimator, deadline_ms):
+        """(stacked_ms, dispatch_ms) when only dispatch's measured cost fits
+        the caller's budget; None otherwise (insufficient samples on either
+        route, both fit, or neither fits — in which case the static
+        preference stands and the front door accounts the overrun)."""
+        with self._lock:
+            ks = (reduce, estimator, "stacked")
+            kd = (reduce, estimator, "dispatch")
+            if (self._count.get(ks, 0) < self.min_samples
+                    or self._count.get(kd, 0) < self.min_samples):
+                return None
+            cs, cd = self._cost[ks], self._cost[kd]
+        if cs > deadline_ms >= cd:
             return cs, cd
         return None
 

@@ -48,6 +48,14 @@ _ROWS_TOTAL = REGISTRY.counter(
 # batch-size buckets are row counts, not latencies
 _BATCH_ROWS_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0,
                        512.0, 1024.0)
+_DEADLINE_FLUSHES = REGISTRY.counter(
+    "batcher.deadline_flushes",
+    "partial batches shipped early because a waiter's deadline budget was "
+    "at risk")
+# when the flush-latency histogram is empty (tracing never ran), assume a
+# flush costs this much when deciding how long a deadline holder may wait —
+# conservative enough to leave budget for the engine pass itself
+_DEFAULT_FLUSH_BUDGET_MS = 1.0
 
 _IDX_SENTINEL = np.iinfo(np.int32).max
 
@@ -262,9 +270,31 @@ class MicroBatcher:
     """Coalesce concurrent single/few-row queries into one fused index pass.
 
     Callers block in ``query``; a request joins the open batch for its
-    (top_k, estimator, approx_ok) group and is flushed when the batch reaches
-    ``max_batch`` rows or ``max_wait_ms`` elapses (whichever first).  One
-    sketch + one segment fan serves the whole batch.
+    (top_k, estimator, approx_ok) group and is flushed when the batch
+    reaches ``max_batch`` rows or ``max_wait_ms`` elapses (whichever first).
+    One sketch + one segment fan serves the whole batch.
+
+    Deadline-aware closing: a caller may pass ``deadline_ms`` (its remaining
+    latency budget).  The batch then tracks the *tightest* absolute deadline
+    among its waiters, and every waiter shortens its wait so the flush
+    starts while that budget — minus the observed p99 flush cost from the
+    ``batcher.flush_ms`` histogram — is still intact.  A partial batch ships
+    early rather than blowing the oldest waiter's deadline; the batcher
+    itself never rejects (admission control and typed shedding live in
+    ``repro.serve.FrontDoor``).
+
+    Example::
+
+        >>> from repro.index import MicroBatcher, SketchIndex
+        >>> from repro.core.sketch import SketchConfig
+        >>> import numpy as np
+        >>> idx = SketchIndex(SketchConfig(p=4, k=16, block_d=32))
+        >>> _ = idx.ingest(np.ones((8, 32), np.float32))
+        >>> mb = MicroBatcher(idx, max_wait_ms=1.0)
+        >>> dists, ids = mb.query(np.ones((1, 32), np.float32), top_k=3,
+        ...                       deadline_ms=50.0)
+        >>> ids.shape
+        (1, 3)
     """
 
     def __init__(self, index, *, max_batch: int = 64, max_wait_ms: float = 2.0):
@@ -278,6 +308,7 @@ class MicroBatcher:
         # a read-modify-write outside the batch lock would drop counts
         self._batches = obs.Counter("batches_run")
         self._rows = obs.Counter("rows_served")
+        self._deadline_flushes = obs.Counter("deadline_flushes")
 
     @property
     def batches_run(self) -> int:
@@ -287,15 +318,57 @@ class MicroBatcher:
     def rows_served(self) -> int:
         return self._rows.value
 
+    @property
+    def deadline_flushes(self) -> int:
+        return self._deadline_flushes.value
+
+    def flush_budget_ms(self) -> float:
+        """How long a flush is expected to take: observed p99 of
+        ``batcher.flush_ms`` (filled while tracing is enabled), with a
+        conservative default before any flush has been measured.  The
+        deadline closer subtracts this from a waiter's remaining budget."""
+        hist = REGISTRY.get("batcher.flush_ms")
+        if hist is not None and getattr(hist, "count", 0) > 0:
+            return float(hist.percentile(99))
+        return _DEFAULT_FLUSH_BUDGET_MS
+
+    def _wait_budget(self, deadline_abs: Optional[float],
+                     now: Optional[float] = None) -> float:
+        """Seconds this waiter may sleep before claiming a flush: the default
+        ``max_wait``, shortened so a batch holding a deadline flushes while
+        ``deadline - p99 flush cost`` budget remains.  <= 0 means flush NOW
+        (the budget is already at risk).  Pure given (deadline_abs, now) —
+        the deterministic-clock tests drive it directly."""
+        if deadline_abs is None:
+            return self.max_wait
+        if now is None:
+            now = obs.trace.clock()
+        budget = (deadline_abs - now) - self.flush_budget_ms() / 1e3
+        return min(self.max_wait, budget)
+
     def stats(self) -> dict:
-        """Serving counters + (when tracing has run) latency/shape summaries
-        from the process-global registry."""
+        """Serving counters, live queue state, and (when tracing has run)
+        latency/shape summaries from the process-global registry.
+
+        ``queue_depth`` is the number of rows currently waiting in open
+        batches and ``oldest_wait_ms`` how long the oldest open batch has
+        been waiting — the two live signals the overload playbook (and the
+        front door's queue gauges) read; completed-flush histograms alone
+        cannot show a stuck or saturated queue."""
+        now = obs.trace.clock()
         with self._lock:
             open_groups = len(self._groups)
+            queue_depth = sum(b.n for b in self._groups.values())
+            oldest = min((b.t_open for b in self._groups.values()),
+                         default=None)
         return {
             "batches_run": self.batches_run,
             "rows_served": self.rows_served,
+            "deadline_flushes": self.deadline_flushes,
             "open_groups": open_groups,
+            "queue_depth": queue_depth,
+            "oldest_wait_ms": (0.0 if oldest is None
+                               else max(0.0, (now - oldest) * 1e3)),
             "queue_wait_ms": REGISTRY.histogram(
                 "batcher.queue_wait_ms").summary(),
             "batch_rows": REGISTRY.histogram(
@@ -311,15 +384,19 @@ class MicroBatcher:
             self.results = None
             self.error: Optional[BaseException] = None
             self.t_open = obs.trace.clock()  # for the queue-wait histogram
+            self.deadline: Optional[float] = None  # tightest absolute deadline
 
     def query(self, rows, top_k: int = 10, estimator: str = "plain",
-              approx_ok=None):
+              approx_ok=None, *, deadline_ms: Optional[float] = None):
         """(distances (b, k), row_ids (b, k)) for this caller's rows, with
         k = min(top_k, index live rows).  Validated up front: a malformed
         ``top_k`` fails only this caller, never the coalesced batch it would
         otherwise poison.  ``approx_ok`` is part of the batch key: callers
         holding different tolerance contracts never share a fused pass (the
-        contract decides the route, and the route decides the answer)."""
+        contract decides the route, and the route decides the answer).
+        ``deadline_ms`` (remaining budget, not part of the key) arms the
+        deadline-aware closer: the batch's tightest deadline governs when a
+        partial batch ships early."""
         _check_top_k(top_k)
         rows = np.atleast_2d(np.asarray(rows))
         if rows.shape[0] == 0:
@@ -328,6 +405,8 @@ class MicroBatcher:
             k_out = min(top_k, self.index.n_live)
             return (jnp.zeros((0, k_out), jnp.float32),
                     np.zeros((0, k_out), np.int64))
+        deadline_abs = (None if deadline_ms is None
+                        else obs.trace.clock() + deadline_ms / 1e3)
         key = (top_k, estimator, approx_ok)
         with self._lock:
             batch = self._groups.get(key)
@@ -337,20 +416,32 @@ class MicroBatcher:
             lo = my.n
             my.rows.append(rows)
             my.n += rows.shape[0]
+            if deadline_abs is not None and (my.deadline is None
+                                             or deadline_abs < my.deadline):
+                my.deadline = deadline_abs
             full = my.n >= self.max_batch
             if full:
                 self._groups.pop(key, None)
         if full:
             self._run(my, key)
-        elif not my.done.wait(self.max_wait):
-            with self._lock:
-                # whoever times out first claims the flush
-                claimed = self._groups.get(key) is my
+        else:
+            wait = self._wait_budget(my.deadline)
+            if wait > 0 and my.done.wait(wait):
+                pass  # someone else flushed while we slept
+            else:
+                with self._lock:
+                    # whoever times out first claims the flush
+                    claimed = self._groups.get(key) is my
+                    if claimed:
+                        self._groups.pop(key, None)
                 if claimed:
-                    self._groups.pop(key, None)
-            if claimed:
-                self._run(my, key)
-            my.done.wait()
+                    if my.deadline is not None and wait < self.max_wait:
+                        # shipped early: the deadline, not the batch window,
+                        # closed this batch
+                        self._deadline_flushes.inc()
+                        _DEADLINE_FLUSHES.inc()
+                    self._run(my, key)
+                my.done.wait()
         if my.error is not None:
             raise my.error
         dists, ids = my.results

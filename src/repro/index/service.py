@@ -165,6 +165,9 @@ class SketchIndex:
         # every query through it; here it pins the dense route and keeps the
         # planned-vs-actual ledger consistent across index kinds)
         self.planner = QueryPlanner()
+        # which serving replica this index backs (stamped onto plans);
+        # set by repro.serve.ReplicaSet, None outside replicated serving
+        self.replica_id: Optional[int] = None
 
     # ------------------------------------------------------------------ state
 
@@ -485,7 +488,8 @@ class SketchIndex:
 
     def query(self, rows: jax.Array, top_k: int = 10,
               estimator: str = "plain", *,
-              approx_ok: Optional[ApproxContract] = None
+              approx_ok: Optional[ApproxContract] = None,
+              deadline_ms: Optional[float] = None
               ) -> Tuple[jax.Array, np.ndarray]:
         """Top-k live neighbors of (q, D) query rows.
 
@@ -495,18 +499,24 @@ class SketchIndex:
         ``approx_ok`` opts into the planner's tolerance contract (sharded
         indexes may then serve mle from the stacked fan); the single-host
         fan is exact regardless, so it accepts and ignores the contract.
+        ``deadline_ms`` (the caller's remaining budget, threaded down by the
+        serving front door) is advisory plan context — the planner may pick
+        a cheaper measured route for it, but the index never drops work.
         """
         qsk = sketch(jnp.asarray(rows), self.key, self.cfg)
         return self.query_sketch(qsk, top_k=top_k, estimator=estimator,
-                                 approx_ok=approx_ok)
+                                 approx_ok=approx_ok, deadline_ms=deadline_ms)
 
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
                      estimator: str = "plain", *,
-                     approx_ok: Optional[ApproxContract] = None):
+                     approx_ok: Optional[ApproxContract] = None,
+                     deadline_ms: Optional[float] = None):
         with obs.span("index.query", metric="index.query_ms", kind="topk",
                       top_k=top_k, estimator=estimator, rows=qsk.n):
             plan = self.planner.plan(reduce="topk", estimator=estimator,
-                                     sharded=False, approx_ok=approx_ok)
+                                     sharded=False, approx_ok=approx_ok,
+                                     deadline_ms=deadline_ms,
+                                     replica=self.replica_id)
             t0 = time.perf_counter()
             out = fan_topk(qsk, self._segments(), self.cfg,
                            top_k=top_k, estimator=estimator,
@@ -517,22 +527,27 @@ class SketchIndex:
 
     def query_threshold(self, rows: jax.Array, radius: float, *,
                         relative: bool = False, estimator: str = "plain",
-                        approx_ok: Optional[ApproxContract] = None):
+                        approx_ok: Optional[ApproxContract] = None,
+                        deadline_ms: Optional[float] = None):
         """(query_rows, row_ids) of live rows with D < radius."""
         qsk = sketch(jnp.asarray(rows), self.key, self.cfg)
         return self.query_threshold_sketch(qsk, radius=radius,
                                            relative=relative,
                                            estimator=estimator,
-                                           approx_ok=approx_ok)
+                                           approx_ok=approx_ok,
+                                           deadline_ms=deadline_ms)
 
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
                                estimator: str = "plain",
-                               approx_ok: Optional[ApproxContract] = None):
+                               approx_ok: Optional[ApproxContract] = None,
+                               deadline_ms: Optional[float] = None):
         with obs.span("index.query", metric="index.threshold_ms",
                       kind="threshold", estimator=estimator, rows=qsk.n):
             plan = self.planner.plan(reduce="threshold", estimator=estimator,
-                                     sharded=False, approx_ok=approx_ok)
+                                     sharded=False, approx_ok=approx_ok,
+                                     deadline_ms=deadline_ms,
+                                     replica=self.replica_id)
             t0 = time.perf_counter()
             out = threshold_scan(qsk, self._segments(), self.cfg,
                                  radius=radius, relative=relative,

@@ -706,13 +706,15 @@ class ShardedSketchIndex(SketchIndex):
     # ---------------------------------------------------------------- query
 
     def _plan(self, reduce: str, estimator: str,
-              approx_ok: Optional[ApproxContract]) -> QueryPlan:
+              approx_ok: Optional[ApproxContract],
+              deadline_ms: Optional[float] = None) -> QueryPlan:
         with self._lock:
             sealed = len(self.sealed)
         return self.planner.plan(
             reduce=reduce, estimator=estimator, sharded=True,
             mesh_available=self._fan_mesh is not None,
-            sealed_segments=sealed, approx_ok=approx_ok)
+            sealed_segments=sealed, approx_ok=approx_ok,
+            deadline_ms=deadline_ms, replica=self.replica_id)
 
     def _note_route(self, plan: QueryPlan, route: str, elapsed_s: float,
                     sp) -> None:
@@ -727,14 +729,15 @@ class ShardedSketchIndex(SketchIndex):
 
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
                      estimator: str = "plain", *,
-                     approx_ok: Optional[ApproxContract] = None):
+                     approx_ok: Optional[ApproxContract] = None,
+                     deadline_ms: Optional[float] = None):
         if estimator not in ("plain", "mle"):
             raise ValueError(f"unknown estimator {estimator!r}")
         _check_top_k(top_k)
         with obs.span("index.query", metric="index.query_ms", kind="topk",
                       top_k=top_k, estimator=estimator, rows=qsk.n) as sp:
             segments = self._segments()
-            plan = self._plan("topk", estimator, approx_ok)
+            plan = self._plan("topk", estimator, approx_ok, deadline_ms)
             for route in plan.chain:
                 t0 = time.perf_counter()
                 out = self._run_topk_route(route, plan, qsk, segments, top_k)
@@ -1007,14 +1010,15 @@ class ShardedSketchIndex(SketchIndex):
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
                                estimator: str = "plain",
-                               approx_ok: Optional[ApproxContract] = None):
+                               approx_ok: Optional[ApproxContract] = None,
+                               deadline_ms: Optional[float] = None):
         if estimator not in ("plain", "mle"):
             raise ValueError(f"unknown estimator {estimator!r}")
         with obs.span("index.query", metric="index.threshold_ms",
                       kind="threshold", estimator=estimator,
                       rows=qsk.n) as sp:
             segments = self._segments()
-            plan = self._plan("threshold", estimator, approx_ok)
+            plan = self._plan("threshold", estimator, approx_ok, deadline_ms)
             for route in plan.chain:
                 t0 = time.perf_counter()
                 out = self._run_threshold_route(route, plan, qsk, segments,

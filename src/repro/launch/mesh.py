@@ -18,26 +18,32 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
-def make_serving_mesh(n_shards: int | None = None, *, devices=None):
-    """The index-serving mesh: 1 x N over ("replica", "data").
+def make_serving_mesh(n_shards: int | None = None, *, devices=None,
+                      n_replicas: int = 1):
+    """The index-serving mesh: R x N over ("replica", "data").
 
     The sharded sketch index spreads sealed segments over the ``data`` axis
     and runs its parallel stage-1 fan as one ``shard_map`` over it; the
-    width-1 ``replica`` axis keeps the mesh shape compatible with the
-    two-axis sharding rules everywhere else.  Defaults to every local device;
-    an explicit ``devices`` list pins the data axis to exactly those devices
-    in order (the restore-by-device-list path), bypassing ``jax.make_mesh``'s
-    own device selection."""
+    ``replica`` axis (width ``n_replicas``, default 1) carries whole copies
+    of the serving corpus — ``repro.serve.ReplicaSet`` places one replica
+    per mesh row and routes each query to exactly one row, so there is never
+    a cross-replica collective.  Defaults to every local device; an explicit
+    ``devices`` list pins the mesh to exactly those devices in row-major
+    (replica-major) order (the restore-by-device-list path), bypassing
+    ``jax.make_mesh``'s own device selection."""
     if devices is not None:
         import numpy as np
         from jax.sharding import Mesh
 
-        n = n_shards or len(devices)
-        if n != len(devices):
-            raise ValueError(f"n_shards={n} != len(devices)={len(devices)}")
-        return Mesh(np.asarray(devices).reshape(1, n), ("replica", "data"))
-    n = n_shards or len(jax.devices())
-    return make_mesh((1, n), ("replica", "data"))
+        n = n_shards or len(devices) // n_replicas
+        if n * n_replicas != len(devices):
+            raise ValueError(
+                f"n_replicas*n_shards={n_replicas}*{n} != "
+                f"len(devices)={len(devices)}")
+        return Mesh(np.asarray(devices).reshape(n_replicas, n),
+                    ("replica", "data"))
+    n = n_shards or len(jax.devices()) // n_replicas
+    return make_mesh((n_replicas, n), ("replica", "data"))
 
 
 def make_parallel(mesh=None, *, knobs: TrainKnobs = TrainKnobs(),

@@ -44,6 +44,20 @@ def main(argv=None):
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="expose /metrics (Prometheus text) and "
                          "/metrics.json on this port while serving")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency budget for the KNN queries; "
+                         "routes them through the SLO front door (expired "
+                         "budgets raise DeadlineExceeded, partial batches "
+                         "ship early when the budget is at risk)")
+    ap.add_argument("--tenant-quota", type=float, default=None,
+                    metavar="ROWS_PER_S",
+                    help="token-bucket admission quota (rows/second, burst "
+                         "= rate) for the front door's default tenant; "
+                         "over-quota requests raise Overloaded")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve KNN queries from this many replica lanes "
+                         "(bit-identical answers; queries route to the "
+                         "least-loaded lane)")
     args = ap.parse_args(argv)
 
     if args.trace:
@@ -66,12 +80,32 @@ def main(argv=None):
         t1 = time.perf_counter()
         queries = corpus[:args.queries] + 0.01 * jax.random.normal(
             jax.random.key(1), (args.queries, args.dims))
-        d, idx = svc.query(queries, top_k=5, mle=True, approx_ok=approx)
+        front_door = None
+        if (args.deadline_ms is not None or args.tenant_quota is not None
+                or args.replicas > 1):
+            from repro.serve import FrontDoor, TenantQuota
+            quota = (TenantQuota(rate=args.tenant_quota,
+                                 burst=args.tenant_quota)
+                     if args.tenant_quota is not None else None)
+            front_door = FrontDoor(svc.index, n_replicas=args.replicas,
+                                   quota=quota,
+                                   default_deadline_ms=args.deadline_ms)
+            d, idx = front_door.query(queries, top_k=5, estimator="mle",
+                                      approx_ok=approx)
+        else:
+            d, idx = svc.query(queries, top_k=5, mle=True, approx_ok=approx)
         t2 = time.perf_counter()
-        hit = float(jnp.mean((idx[:, 0] == jnp.arange(args.queries))))
+        hit = float(jnp.mean((jnp.asarray(idx)[:, 0]
+                              == jnp.arange(args.queries))))
         print(f"ingest {args.corpus_rows}x{args.dims}: {t1-t0:.2f}s; "
               f"query {args.queries}: {t2-t1:.2f}s; top1 self-recall {hit:.2f}")
         print("nn dists:", [round(float(x), 5) for x in d[:, 0]])
+        if front_door is not None:
+            sched = front_door.stats()["scheduler"]
+            print(f"scheduler: admitted={sched['admitted']} "
+                  f"shed={sched['shed']} "
+                  f"deadline_exceeded={sched['deadline_exceeded']} "
+                  f"replicas={front_door.replicas.n_replicas}")
         if args.trace:
             plan = svc.index.planner.last_plan
             if plan is not None:

@@ -13,6 +13,10 @@ Three pieces, wired together:
     ``snapshot()`` dict, Prometheus text exposition, optional stdlib HTTP
     scrape endpoint).  Counters are always live (they are the serving
     stats), histograms fill from spans only while tracing is enabled.
+    The scheduler (``repro.serve``) reports here too: ``scheduler.*``
+    admission/shed/deadline counters, the ``scheduler.queue_depth`` gauge,
+    and the ``scheduler.deadline_slack_ms`` / ``scheduler.shed_rows``
+    histograms all land in the same registry the operator scrapes.
   * :mod:`repro.obs.slowlog` — a bounded worst-N log of query traces,
     attached as a tracer sink and surfaced via ``SketchIndex.stats()``.
 

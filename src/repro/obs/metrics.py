@@ -190,7 +190,22 @@ class Histogram:
 class MetricsRegistry:
     """Name -> instrument map.  ``counter``/``gauge``/``histogram`` are
     get-or-create and idempotent, so instrumented call sites never need a
-    registration phase (or a module import order)."""
+    registration phase (or a module import order).
+
+    ``REGISTRY`` (module-level) is the process-global instance every layer
+    of the serving stack reports into; ``reset()`` exists for test
+    isolation only.
+
+    Example::
+
+        >>> from repro.obs.metrics import REGISTRY
+        >>> REGISTRY.counter("demo.requests", "requests served").inc()
+        >>> REGISTRY.counter("demo.requests").value
+        1
+        >>> REGISTRY.histogram("demo.latency_ms").observe(3.2)
+        >>> REGISTRY.histogram("demo.latency_ms").summary()["count"]
+        1
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -280,7 +295,16 @@ def serve_http(port: int, registry: Optional[MetricsRegistry] = None,
                host: str = "127.0.0.1"):
     """Start a daemon-thread HTTP server exposing ``/metrics`` (Prometheus
     text) and ``/metrics.json`` (the ``snapshot()`` dict).  Returns the
-    server; ``server.shutdown()`` stops it.  Stdlib only — no new deps."""
+    server; ``server.shutdown()`` stops it.  Stdlib only — no new deps.
+
+    Example::
+
+        >>> from repro.obs.metrics import serve_http
+        >>> server = serve_http(0)          # port 0: OS-assigned free port
+        >>> port = server.server_address[1]
+        >>> # curl http://127.0.0.1:<port>/metrics
+        >>> server.shutdown()
+    """
     import json
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 

@@ -218,6 +218,16 @@ def span(name: str, metric: Optional[str] = None, **attrs):
       **attrs: static attributes recorded on the span.
 
     Returns the shared no-op span when tracing is disabled.
+
+    Example::
+
+        >>> from repro import obs
+        >>> obs.enable()
+        >>> with obs.span("demo.stage", metric="demo.stage_ms", rows=4) as sp:
+        ...     _ = sp.set(note="extra attrs may be attached mid-span")
+        >>> obs.metrics.REGISTRY.histogram("demo.stage_ms").count
+        1
+        >>> obs.disable()
     """
     if not _ENABLED:
         return NULL_SPAN

@@ -1,0 +1,32 @@
+"""``repro.serve`` — the SLO-aware serving front door.
+
+The layers below this package compute (engine), store (index), fan
+(sharded), and decide routes (planner); this package decides **whether and
+when** a request runs at all: per-tenant token-bucket admission with
+bounded queues (:class:`AdmissionController`), typed load shedding
+(:class:`Overloaded` / :class:`DeadlineExceeded` — never a silent drop),
+deadline-aware micro-batch closing (via
+:class:`~repro.index.MicroBatcher`), and replica fan-out over the serving
+mesh's ``replica`` axis (:class:`ReplicaSet`), all composed by
+:class:`FrontDoor`.
+
+The scheduler is estimator-agnostic: it forwards ``estimator`` /
+``approx_ok`` untouched, so every (p, projection, estimator) combination
+the engine registry grows inherits deadlines, quotas, and replicas for
+free.  The operator's handbook lives in ``docs/serving.md``.
+"""
+
+from .admission import AdmissionController, TenantQuota
+from .errors import DeadlineExceeded, Overloaded, ServeError
+from .front_door import FrontDoor
+from .replicas import ReplicaSet
+
+__all__ = [
+    "AdmissionController",
+    "TenantQuota",
+    "DeadlineExceeded",
+    "Overloaded",
+    "ServeError",
+    "FrontDoor",
+    "ReplicaSet",
+]

@@ -1,0 +1,192 @@
+"""Per-tenant admission control: token-bucket quotas + bounded queues.
+
+The front door calls :meth:`AdmissionController.admit` before any work
+happens; a request that does not fit its tenant's budget raises a typed
+:class:`~repro.serve.errors.Overloaded` immediately — admission never
+blocks, so an over-quota tenant cannot add queueing delay to anyone else's
+requests.  Two independent bounds per tenant:
+
+  * **rate** — a token bucket (``TenantQuota``: ``rate`` rows/second
+    refill, ``burst`` bucket capacity).  Sustained load above ``rate`` is
+    shed with ``reason="quota"`` and a ``retry_after_ms`` hint.
+  * **queue** — at most ``max_queued_rows`` rows in flight (admitted, not
+    yet answered) per tenant.  A stall downstream surfaces as
+    ``reason="queue"`` shedding, not unbounded memory growth.
+
+The clock is injectable (``clock=`` a ``time.monotonic``-compatible
+callable), so quota behavior is deterministic under test — the same pattern
+``CompactionPolicy`` and ``RebalancePolicy`` use.
+
+Example (deterministic clock)::
+
+    >>> from repro.serve import AdmissionController, Overloaded, TenantQuota
+    >>> t = [0.0]
+    >>> ac = AdmissionController(quota=TenantQuota(rate=10.0, burst=2.0),
+    ...                          clock=lambda: t[0])
+    >>> ac.admit("a", 2); ac.release("a", 2)   # burst covers 2 rows
+    >>> try:
+    ...     ac.admit("a", 1)                   # bucket empty at t=0
+    ... except Overloaded as e:
+    ...     print(e.reason)
+    quota
+    >>> t[0] = 0.1                             # 0.1s * 10 rows/s = 1 token
+    >>> ac.admit("a", 1); ac.release("a", 1)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+from repro import obs
+from repro.obs.metrics import REGISTRY
+
+from .errors import Overloaded
+
+__all__ = ["TenantQuota", "AdmissionController"]
+
+# fleet-wide scheduler counters (always live, like the batcher's): the shed
+# ledger must match rejected requests exactly even with tracing off
+_SHED_QUOTA = REGISTRY.counter(
+    "scheduler.shed_quota", "requests shed: tenant token bucket empty")
+_SHED_QUEUE = REGISTRY.counter(
+    "scheduler.shed_queue", "requests shed: tenant in-flight queue full")
+# rows-per-shed-request histogram (row-count buckets, not latencies)
+_SHED_ROWS_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0,
+                      512.0, 1024.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """A tenant's token-bucket budget, in query rows.
+
+    ``rate`` rows/second refill; ``burst`` is the bucket capacity — the
+    largest row count a cold tenant can push instantaneously (and the
+    largest single admissible request).
+    """
+
+    rate: float = 1000.0
+    burst: float = 1000.0
+
+    def __post_init__(self):
+        for name in ("rate", "burst"):
+            v = getattr(self, name)
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v > 0):
+                raise ValueError(
+                    f"TenantQuota.{name} must be a finite float > 0, "
+                    f"got {v!r}")
+
+
+class _Bucket:
+    __slots__ = ("tokens", "last", "inflight", "admitted", "shed_quota",
+                 "shed_queue")
+
+    def __init__(self, burst: float, now: float):
+        self.tokens = burst
+        self.last = now
+        self.inflight = 0      # rows admitted, not yet released
+        self.admitted = 0      # requests
+        self.shed_quota = 0    # requests
+        self.shed_queue = 0    # requests
+
+
+class AdmissionController:
+    """Thread-safe per-tenant token buckets + bounded in-flight queues.
+
+    ``quota`` is the default per-tenant budget (None disables rate limiting
+    — only the queue bound applies); ``tenant_quotas`` overrides it for
+    named tenants.  ``max_queued_rows`` bounds each tenant's admitted
+    in-flight rows.  Callers pair every successful :meth:`admit` with a
+    :meth:`release` (the front door does this in a ``finally``).
+    """
+
+    def __init__(self, *, quota: Optional[TenantQuota] = None,
+                 tenant_quotas: Optional[Dict[str, TenantQuota]] = None,
+                 max_queued_rows: int = 1024,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_queued_rows <= 0:
+            raise ValueError(
+                f"max_queued_rows must be > 0, got {max_queued_rows}")
+        self.quota = quota
+        self.tenant_quotas = dict(tenant_quotas or {})
+        self.max_queued_rows = max_queued_rows
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._buckets: Dict[str, _Bucket] = {}
+
+    def _quota_for(self, tenant: str) -> Optional[TenantQuota]:
+        return self.tenant_quotas.get(tenant, self.quota)
+
+    def _bucket(self, tenant: str, now: float) -> _Bucket:
+        b = self._buckets.get(tenant)
+        if b is None:
+            q = self._quota_for(tenant)
+            b = self._buckets[tenant] = _Bucket(
+                q.burst if q is not None else 0.0, now)
+        return b
+
+    def admit(self, tenant: str, rows: int) -> None:
+        """Admit ``rows`` query rows for ``tenant`` or raise ``Overloaded``.
+
+        Never blocks.  Queue bound first (it protects this process), then
+        the token bucket (it protects other tenants' share)."""
+        if rows <= 0:
+            return  # empty requests are answered without scheduling
+        now = self.clock()
+        with self._lock:
+            b = self._bucket(tenant, now)
+            if b.inflight + rows > self.max_queued_rows:
+                b.shed_queue += 1
+                shed = Overloaded(tenant, "queue")
+            else:
+                q = self._quota_for(tenant)
+                if q is None:
+                    b.admitted += 1
+                    b.inflight += rows
+                    return
+                b.tokens = min(q.burst, b.tokens + (now - b.last) * q.rate)
+                b.last = now
+                if b.tokens >= rows:
+                    b.tokens -= rows
+                    b.admitted += 1
+                    b.inflight += rows
+                    return
+                b.shed_quota += 1
+                shed = Overloaded(
+                    tenant, "quota",
+                    retry_after_ms=(rows - b.tokens) / q.rate * 1e3)
+        (_SHED_QUOTA if shed.reason == "quota" else _SHED_QUEUE).inc()
+        if obs.enabled():
+            REGISTRY.histogram(
+                "scheduler.shed_rows", "rows per shed request",
+                buckets=_SHED_ROWS_BUCKETS).observe(rows)
+        raise shed
+
+    def release(self, tenant: str, rows: int) -> None:
+        """Return ``rows`` in-flight rows (NOT tokens — spent quota stays
+        spent; only the queue bound is freed)."""
+        if rows <= 0:
+            return
+        with self._lock:
+            b = self._buckets.get(tenant)
+            if b is not None:
+                b.inflight = max(0, b.inflight - rows)
+
+    def stats(self) -> dict:
+        """Per-tenant admission ledger: admitted/shed request counts,
+        rows currently in flight, and tokens remaining."""
+        with self._lock:
+            return {
+                tenant: {
+                    "admitted": b.admitted,
+                    "shed_quota": b.shed_quota,
+                    "shed_queue": b.shed_queue,
+                    "inflight_rows": b.inflight,
+                    "tokens": round(b.tokens, 3),
+                }
+                for tenant, b in sorted(self._buckets.items())
+            }

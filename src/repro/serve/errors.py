@@ -1,0 +1,68 @@
+"""Typed rejections for the serving front door.
+
+Load shedding is explicit and typed — a request the scheduler will not
+serve raises :class:`Overloaded` or :class:`DeadlineExceeded`, never hangs
+and is never silently dropped.  Both carry enough context (tenant, reason,
+suggested retry delay, the blown budget) for a client to back off sensibly
+and for the operator to read the rejection off a log line.
+
+These live in ``repro.serve`` (not ``repro.index``) on purpose: the index
+layer never rejects work — deadlines are advisory plan context down there —
+so the only importers of these types are the scheduler and its callers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+__all__ = ["ServeError", "Overloaded", "DeadlineExceeded"]
+
+
+class ServeError(RuntimeError):
+    """Base class for front-door rejections (catch-all for clients)."""
+
+
+class Overloaded(ServeError):
+    """The scheduler refused to admit this request.
+
+    ``reason`` is ``"quota"`` (the tenant's token bucket is empty) or
+    ``"queue"`` (the tenant's bounded in-flight queue is full).
+    ``retry_after_ms`` — when known — is how long until the token bucket
+    can cover a request of this size; clients should treat it as a backoff
+    hint, not a reservation.
+
+    Example::
+
+        >>> from repro.serve import Overloaded
+        >>> err = Overloaded("t0", "quota", retry_after_ms=12.5)
+        >>> (err.tenant, err.reason)
+        ('t0', 'quota')
+    """
+
+    def __init__(self, tenant: str, reason: str,
+                 retry_after_ms: Optional[float] = None):
+        self.tenant = tenant
+        self.reason = reason
+        self.retry_after_ms = retry_after_ms
+        hint = (f", retry after ~{retry_after_ms:.1f}ms"
+                if retry_after_ms is not None else "")
+        super().__init__(
+            f"tenant {tenant!r} shed ({reason}{hint})")
+
+
+class DeadlineExceeded(ServeError):
+    """The request's latency budget was exhausted before it could be served.
+
+    Raised by the front door when a request arrives with a non-positive
+    remaining budget — doing the work would only produce an answer nobody is
+    waiting for.  Requests that *complete* late are still answered (the work
+    is already done); those count into ``scheduler.deadline_overruns``
+    instead.
+    """
+
+    def __init__(self, tenant: str, deadline_ms: float):
+        self.tenant = tenant
+        self.deadline_ms = deadline_ms
+        super().__init__(
+            f"tenant {tenant!r}: deadline budget {deadline_ms:g}ms already "
+            "exhausted")

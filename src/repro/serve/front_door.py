@@ -1,0 +1,203 @@
+"""The SLO-aware serving front door: admission → deadline → batch → replica.
+
+:class:`FrontDoor` is the one object an operator deploys in front of a
+``SketchIndex``/``ShardedSketchIndex``.  Per request it runs, in order:
+
+  1. **Admission** — the tenant's token bucket and bounded in-flight queue
+     (:class:`~repro.serve.admission.AdmissionController`).  An over-budget
+     request raises a typed :class:`~repro.serve.errors.Overloaded`
+     *immediately* — shedding never blocks and never silently drops.
+  2. **Deadline check** — a request whose remaining budget is already
+     non-positive raises :class:`~repro.serve.errors.DeadlineExceeded`
+     before any work is queued.
+  3. **Deadline-aware batching** — the request joins the
+     :class:`~repro.index.MicroBatcher`, which ships a partial batch early
+     when the batch's tightest deadline (minus the observed p99 flush cost)
+     is at risk.
+  4. **Replica routing** — the batch is served by one lane of a
+     :class:`~repro.serve.replicas.ReplicaSet` (least-loaded, EWMA
+     hysteresis), bit-identical to the replica=1 path.
+
+Every decision is visible through ``stats()["scheduler"]`` and the same
+Prometheus surface (``repro.obs.serve_http``) the rest of the stack
+exposes: ``scheduler.admitted`` / ``scheduler.shed_*`` /
+``scheduler.deadline_exceeded`` counters, a ``scheduler.queue_depth``
+gauge, and ``scheduler.deadline_slack_ms`` / ``scheduler.shed_rows``
+histograms.
+
+Example::
+
+    >>> import numpy as np
+    >>> from repro.core.sketch import SketchConfig
+    >>> from repro.index import SketchIndex
+    >>> from repro.serve import FrontDoor, TenantQuota
+    >>> idx = SketchIndex(SketchConfig(p=4, k=16, block_d=32))
+    >>> _ = idx.ingest(np.ones((8, 32), np.float32))
+    >>> fd = FrontDoor(idx, quota=TenantQuota(rate=100.0, burst=16.0),
+    ...                max_wait_ms=1.0)
+    >>> d, ids = fd.query(np.ones((1, 32), np.float32), top_k=3,
+    ...                   tenant="demo", deadline_ms=100.0)
+    >>> fd.stats()["scheduler"]["admitted"]
+    1
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro import obs
+from repro.index.query import MicroBatcher
+from repro.obs.metrics import REGISTRY
+
+from .admission import AdmissionController, TenantQuota
+from .errors import DeadlineExceeded
+from .replicas import ReplicaSet
+
+__all__ = ["FrontDoor"]
+
+# always-live scheduler ledger (the shed counters live in admission.py)
+_ADMITTED = REGISTRY.counter(
+    "scheduler.admitted", "requests admitted by the front door")
+_DEADLINE_EXCEEDED = REGISTRY.counter(
+    "scheduler.deadline_exceeded",
+    "requests rejected: deadline budget exhausted on arrival")
+_DEADLINE_OVERRUNS = REGISTRY.counter(
+    "scheduler.deadline_overruns",
+    "admitted requests answered after their deadline (late, not dropped)")
+
+
+class FrontDoor:
+    """SLO-aware request scheduler over one index.
+
+    Parameters
+    ----------
+    index : the writable primary (``SketchIndex`` or subclass); writes keep
+        going to it directly — the front door only serves reads.
+    n_replicas / replica_devices : replica fan-out (see ``ReplicaSet``);
+        ``replica_devices`` is one device list per replica, e.g. from
+        ``core.distributed.mesh_replica_devices`` over a serving mesh built
+        with ``make_serving_mesh(n_shards, n_replicas=R)``.
+    quota / tenant_quotas / max_queued_rows : admission control (see
+        ``AdmissionController``).  ``quota=None`` disables rate limiting.
+    max_batch / max_wait_ms : micro-batching window (see ``MicroBatcher``).
+    default_deadline_ms : budget applied to requests that do not carry one
+        (None = no deadline).
+    clock : injectable monotonic clock for admission + deadline accounting
+        (tests pin it; production uses ``time.monotonic``).
+    """
+
+    def __init__(self, index, *, n_replicas: int = 1,
+                 replica_devices: Optional[Sequence] = None,
+                 quota: Optional[TenantQuota] = None,
+                 tenant_quotas: Optional[Dict[str, TenantQuota]] = None,
+                 max_queued_rows: int = 1024,
+                 max_batch: int = 64, max_wait_ms: float = 2.0,
+                 default_deadline_ms: Optional[float] = None,
+                 clock=time.monotonic):
+        self.index = index
+        self.default_deadline_ms = default_deadline_ms
+        self.clock = clock
+        self.replicas = ReplicaSet(index, n_replicas=n_replicas,
+                                   replica_devices=replica_devices)
+        self.batcher = MicroBatcher(self.replicas, max_batch=max_batch,
+                                    max_wait_ms=max_wait_ms)
+        self.admission = AdmissionController(
+            quota=quota, tenant_quotas=tenant_quotas,
+            max_queued_rows=max_queued_rows, clock=clock)
+        # own instruments (this door), mirrored into the fleet-wide registry
+        self._admitted = obs.Counter("admitted")
+        self._deadline_exceeded = obs.Counter("deadline_exceeded")
+        self._deadline_overruns = obs.Counter("deadline_overruns")
+        self._queue_depth = obs.Counter("queue_depth")  # rows in flight
+        self._queue_gauge = REGISTRY.gauge(
+            "scheduler.queue_depth",
+            "rows admitted by the front door and not yet answered")
+
+    # --------------------------------------------------------------- serving
+
+    def query(self, rows, top_k: int = 10, estimator: str = "plain", *,
+              tenant: str = "default", deadline_ms: Optional[float] = None,
+              approx_ok=None):
+        """Top-k for ``rows`` under ``tenant``'s budget.
+
+        Returns exactly what ``index.query`` returns (the scheduler never
+        changes answers — bit-identical through batching and replicas), or
+        raises ``Overloaded`` / ``DeadlineExceeded``.  ``deadline_ms`` is
+        the request's *remaining* latency budget; an admitted request is
+        always answered, even late (late answers count into
+        ``scheduler.deadline_overruns``)."""
+        rows = np.atleast_2d(np.asarray(rows))
+        n = rows.shape[0]
+        if deadline_ms is None:
+            deadline_ms = self.default_deadline_ms
+        if deadline_ms is not None and deadline_ms <= 0:
+            self._deadline_exceeded.inc()
+            _DEADLINE_EXCEEDED.inc()
+            raise DeadlineExceeded(tenant, deadline_ms)
+        self.admission.admit(tenant, n)  # raises Overloaded
+        self._admitted.inc()
+        _ADMITTED.inc()
+        self._queue_depth.inc(n)
+        self._queue_gauge.set(self._queue_depth.value)
+        t0 = self.clock()
+        try:
+            out = self.batcher.query(rows, top_k=top_k, estimator=estimator,
+                                     approx_ok=approx_ok,
+                                     deadline_ms=deadline_ms)
+        finally:
+            self.admission.release(tenant, n)
+            self._queue_depth.inc(-n)
+            self._queue_gauge.set(self._queue_depth.value)
+        if deadline_ms is not None:
+            slack = deadline_ms - (self.clock() - t0) * 1e3
+            if obs.enabled():
+                REGISTRY.histogram(
+                    "scheduler.deadline_slack_ms",
+                    "budget remaining when a deadline request completed "
+                    "(negative = late)").observe(slack)
+            if slack < 0:
+                self._deadline_overruns.inc()
+                _DEADLINE_OVERRUNS.inc()
+        return out
+
+    def flush(self) -> None:
+        """Flush every open batch (shutdown / test hook)."""
+        self.batcher.flush()
+
+    # --------------------------------------------------------------- readout
+
+    def stats(self) -> dict:
+        """The operator surface: one dict with every scheduling decision.
+
+        ``scheduler`` — this door's admission/deadline ledger (requests) +
+        live queue state; ``tenants`` nested inside it is the per-tenant
+        admission breakdown.  ``batcher`` / ``replicas`` / ``index`` are the
+        downstream layers' own ``stats()``."""
+        admission = self.admission.stats()
+        shed_quota = sum(t["shed_quota"] for t in admission.values())
+        shed_queue = sum(t["shed_queue"] for t in admission.values())
+        batcher = self.batcher.stats()
+        return {
+            "scheduler": {
+                "admitted": self._admitted.value,
+                "shed": shed_quota + shed_queue,
+                "shed_quota": shed_quota,
+                "shed_queue": shed_queue,
+                "deadline_exceeded": self._deadline_exceeded.value,
+                "deadline_overruns": self._deadline_overruns.value,
+                "deadline_flushes": self.batcher.deadline_flushes,
+                "queue_depth": self._queue_depth.value,
+                "oldest_wait_ms": batcher["oldest_wait_ms"],
+                "deadline_slack_ms": REGISTRY.histogram(
+                    "scheduler.deadline_slack_ms").summary(),
+                "shed_rows": REGISTRY.histogram(
+                    "scheduler.shed_rows").summary(),
+                "tenants": admission,
+            },
+            "batcher": batcher,
+            "replicas": self.replicas.stats(),
+            "index": self.index.stats(),
+        }

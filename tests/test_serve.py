@@ -1,0 +1,410 @@
+"""Front-door scheduling contracts: deadlines, tenants, replicas.
+
+Four contracts pin everything here:
+
+  * shedding is typed and immediate — an over-budget request raises
+    ``Overloaded``/``DeadlineExceeded`` without blocking, and the shed
+    counters match rejected requests exactly (never a silent drop);
+  * deadline-aware batch closing is deterministic arithmetic — the wait a
+    deadline-holding waiter takes is ``min(max_wait, budget - p99 flush
+    cost)``, pinned with a fake clock, and a partial batch really does ship
+    early;
+  * replicas never change answers — every lane of a ``ReplicaSet`` is
+    bit-identical to the replica=1 path across the whole index lifecycle
+    (ingest, seal, delete, compact);
+  * routing avoids busy/slow lanes with the planner's hysteresis
+    discipline, deterministically.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import SketchConfig
+from repro.core.distributed import mesh_replica_devices
+from repro.index import IndexConfig, MicroBatcher, QueryPlanner, SketchIndex
+from repro.launch.mesh import make_serving_mesh
+from repro.obs.metrics import REGISTRY
+from repro.serve import (
+    AdmissionController,
+    DeadlineExceeded,
+    FrontDoor,
+    Overloaded,
+    ReplicaSet,
+    TenantQuota,
+)
+
+CFG = SketchConfig(p=4, k=16, block_d=32)
+D = 64
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(31)
+
+
+def _index(rng, n=200, capacity=64, seed=7):
+    idx = SketchIndex(CFG, seed=seed,
+                      index_cfg=IndexConfig(segment_capacity=capacity))
+    idx.ingest(rng.uniform(0, 1, (n, D)).astype(np.float32))
+    return idx
+
+
+# --------------------------------------------------------------- admission
+
+
+def test_token_bucket_deterministic_clock():
+    t = [0.0]
+    ac = AdmissionController(quota=TenantQuota(rate=10.0, burst=4.0),
+                             clock=lambda: t[0])
+    ac.admit("a", 4)          # the whole burst, cold
+    ac.release("a", 4)
+    with pytest.raises(Overloaded) as ei:
+        ac.admit("a", 1)      # bucket empty at t=0
+    assert ei.value.reason == "quota"
+    assert ei.value.tenant == "a"
+    assert ei.value.retry_after_ms == pytest.approx(100.0)  # 1 row @ 10/s
+    t[0] = 0.2                # 2 tokens refilled
+    ac.admit("a", 2)
+    ac.release("a", 2)
+    with pytest.raises(Overloaded):
+        ac.admit("a", 1)
+    # refill caps at burst
+    t[0] = 100.0
+    st = ac.stats()["a"]
+    assert st["admitted"] == 2 and st["shed_quota"] == 2
+    ac.admit("a", 4)
+    with pytest.raises(Overloaded):
+        ac.admit("a", 1)
+
+
+def test_queue_bound_sheds_without_blocking():
+    ac = AdmissionController(max_queued_rows=4, clock=lambda: 0.0)
+    ac.admit("t", 3)
+    t0 = time.perf_counter()
+    with pytest.raises(Overloaded) as ei:
+        ac.admit("t", 2)      # 3 + 2 > 4
+    assert time.perf_counter() - t0 < 0.5  # shed, not queued
+    assert ei.value.reason == "queue"
+    ac.release("t", 3)
+    ac.admit("t", 4)          # queue freed; no rate quota configured
+    assert ac.stats()["t"]["shed_queue"] == 1
+
+
+def test_quota_isolation_per_tenant():
+    """Tenants hold independent buckets: draining one never sheds another."""
+    t = [0.0]
+    ac = AdmissionController(quota=TenantQuota(rate=10.0, burst=2.0),
+                             clock=lambda: t[0])
+    ac.admit("greedy", 2)
+    with pytest.raises(Overloaded):
+        ac.admit("greedy", 2)
+    ac.admit("polite", 2)     # unaffected
+
+
+# -------------------------------------------------------------- front door
+
+
+def test_overquota_tenant_shed_while_inquota_tenant_served(rng):
+    idx = _index(rng)
+    fd = FrontDoor(idx, max_wait_ms=1.0,
+                   tenant_quotas={"small": TenantQuota(rate=1e-3, burst=2.0)})
+    q = rng.uniform(0, 1, (2, D)).astype(np.float32)
+    ref = idx.query(q, top_k=5)
+    fd.query(q, top_k=5, tenant="small")       # burst covers the first 2 rows
+    with pytest.raises(Overloaded) as ei:
+        fd.query(q, top_k=5, tenant="small")   # bucket empty for ~2000s
+    assert ei.value.reason == "quota"
+    # the in-quota tenant on the SAME index is served, with correct answers
+    d, ids = fd.query(q, top_k=5, tenant="big")
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(ref[0]))
+    np.testing.assert_array_equal(ids, ref[1])
+    sched = fd.stats()["scheduler"]
+    assert sched["admitted"] == 2
+    assert sched["shed"] == 1 and sched["shed_quota"] == 1
+    assert sched["tenants"]["small"]["shed_quota"] == 1
+    assert sched["tenants"]["big"]["admitted"] == 1
+
+
+def test_shed_counters_match_rejections_exactly(rng):
+    idx = _index(rng, n=80)
+    fd = FrontDoor(idx, max_wait_ms=1.0,
+                   quota=TenantQuota(rate=1e-3, burst=3.0))
+    q1 = rng.uniform(0, 1, (1, D)).astype(np.float32)
+    served = shed = 0
+    for _ in range(8):
+        try:
+            fd.query(q1, top_k=3, tenant="t")
+            served += 1
+        except Overloaded:
+            shed += 1
+    assert served == 3 and shed == 5  # burst covers exactly 3 one-row queries
+    sched = fd.stats()["scheduler"]
+    assert sched["admitted"] == served
+    assert sched["shed"] == shed
+    assert sched["tenants"]["t"]["admitted"] == served
+    assert sched["tenants"]["t"]["shed_quota"] == shed
+
+
+def test_expired_deadline_is_typed_rejection(rng):
+    idx = _index(rng, n=80)
+    fd = FrontDoor(idx, max_wait_ms=1.0)
+    q = rng.uniform(0, 1, (1, D)).astype(np.float32)
+    for bad in (0.0, -3.0):
+        with pytest.raises(DeadlineExceeded):
+            fd.query(q, top_k=3, deadline_ms=bad)
+    sched = fd.stats()["scheduler"]
+    assert sched["deadline_exceeded"] == 2
+    assert sched["admitted"] == 0  # rejected before admission/any work
+    # default_deadline_ms applies when the request carries none
+    fd2 = FrontDoor(idx, max_wait_ms=1.0, default_deadline_ms=-1.0)
+    with pytest.raises(DeadlineExceeded):
+        fd2.query(q, top_k=3)
+
+
+# ------------------------------------------------- deadline-aware batching
+
+
+def test_wait_budget_arithmetic_deterministic_clock(rng):
+    """The deadline closer's wait is pure arithmetic over (deadline, now,
+    p99 flush cost) — pinned here with explicit ``now`` values."""
+    idx = _index(rng, n=40)
+    mb = MicroBatcher(idx, max_wait_ms=50.0)
+    # no deadline: the full batch window
+    assert mb._wait_budget(None) == pytest.approx(0.050)
+    flush_s = mb.flush_budget_ms() / 1e3
+    # generous budget: the batch window still governs
+    assert mb._wait_budget(10.0, now=0.0) == pytest.approx(0.050)
+    # tight budget: wait shrinks to (remaining - p99 flush estimate)
+    assert mb._wait_budget(10.0, now=9.98) == pytest.approx(0.02 - flush_s)
+    # at-risk budget: flush immediately
+    assert mb._wait_budget(10.0, now=10.0 - flush_s) <= 0
+    assert mb._wait_budget(10.0, now=12.0) < 0
+
+
+def test_flush_budget_reads_p99_histogram(rng):
+    idx = _index(rng, n=40)
+    mb = MicroBatcher(idx, max_wait_ms=50.0)
+    before = REGISTRY.get("batcher.flush_ms")
+    n_before = before.count if before is not None else 0
+    obs.enable()
+    try:
+        mb.query(rng.uniform(0, 1, (1, D)).astype(np.float32), top_k=3)
+    finally:
+        obs.disable()
+    hist = REGISTRY.get("batcher.flush_ms")
+    assert hist is not None and hist.count == n_before + 1
+    assert mb.flush_budget_ms() == pytest.approx(hist.percentile(99))
+
+
+def test_partial_batch_ships_early_on_tight_deadline(rng):
+    """A 30s batch window + a 100ms budget: the deadline closer must ship
+    the partial batch in well under the window (the answer stays exact)."""
+    idx = _index(rng, n=80)
+    mb = MicroBatcher(idx, max_wait_ms=30_000.0)
+    q = rng.uniform(0, 1, (1, D)).astype(np.float32)
+    ref = idx.query(q, top_k=5)
+    t0 = time.perf_counter()
+    d, ids = mb.query(q, top_k=5, deadline_ms=100.0)
+    assert time.perf_counter() - t0 < 10.0  # vs the 30s window
+    assert mb.deadline_flushes == 1
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(ref[0]))
+    np.testing.assert_array_equal(ids, ref[1])
+
+
+def test_tightest_deadline_governs_shared_batch(rng):
+    """A deadline-less waiter sharing the batch is released when the
+    deadline holder's budget closes the batch early."""
+    idx = _index(rng, n=80)
+    mb = MicroBatcher(idx, max_wait_ms=30_000.0)
+    q = rng.uniform(0, 1, (1, D)).astype(np.float32)
+    out = {}
+
+    def patient():
+        out["patient"] = mb.query(q, top_k=3)  # no deadline: 30s window
+
+    th = threading.Thread(target=patient)
+    th.start()
+    # wait for the patient request to open the batch
+    for _ in range(500):
+        if mb.stats()["queue_depth"] >= 1:
+            break
+        time.sleep(0.01)
+    assert mb.stats()["queue_depth"] >= 1
+    out["urgent"] = mb.query(q, top_k=3, deadline_ms=100.0)
+    th.join(timeout=30.0)
+    assert not th.is_alive(), "deadline flush must release every waiter"
+    assert mb.batches_run == 1  # one fused pass served both
+    np.testing.assert_array_equal(out["patient"][1], out["urgent"][1])
+
+
+def test_batcher_stats_expose_queue_depth_and_oldest_wait(rng):
+    idx = _index(rng, n=40)
+    mb = MicroBatcher(idx, max_wait_ms=50.0)
+    s = mb.stats()
+    assert s["queue_depth"] == 0 and s["oldest_wait_ms"] == 0.0
+    # deterministic: inject a fake clock and open a batch by hand
+    real = obs.trace.clock
+    fake = [100.0]
+    obs.trace.clock = lambda: fake[0]
+    try:
+        batch = mb._Batch()
+        batch.rows.append(np.zeros((3, D), np.float32))
+        batch.n = 3
+        mb._groups[(3, "plain", None)] = batch
+        fake[0] = 100.25
+        s = mb.stats()
+        assert s["queue_depth"] == 3
+        assert s["oldest_wait_ms"] == pytest.approx(250.0)
+        mb._groups.clear()
+    finally:
+        obs.trace.clock = real
+
+
+# ---------------------------------------------------------------- replicas
+
+
+def test_replica_fan_lifecycle_bit_identical(rng):
+    """Every lane answers bit-identically to the replica=1 (primary) path
+    across ingest → seal → delete → compact → ingest."""
+    idx = _index(rng, n=150, capacity=64)
+    dev = jax.devices()[0]
+    # lane 1 on the default device, lane 2 pinned to an explicit device list
+    rs = ReplicaSet(idx, n_replicas=3,
+                    replica_devices=[[dev], [dev], [dev, dev]])
+    q = rng.uniform(0, 1, (3, D)).astype(np.float32)
+
+    def check():
+        ref_d, ref_ids = idx.query(q, top_k=7)
+        for r in range(rs.n_replicas):
+            d, ids = rs.query(q, top_k=7, replica=r)
+            np.testing.assert_array_equal(np.asarray(d), np.asarray(ref_d))
+            np.testing.assert_array_equal(ids, ref_ids)
+        rr, ri = idx.query_threshold(q, 0.75, relative=True)
+        for r in range(rs.n_replicas):
+            hr, hi = rs.query_threshold(q, 0.75, relative=True, replica=r)
+            np.testing.assert_array_equal(hr, rr)
+            np.testing.assert_array_equal(hi, ri)
+
+    check()
+    idx.seal_active()
+    check()
+    ids = idx.query(q, top_k=7)[1]
+    idx.delete(np.unique(ids[:, :3].ravel()))
+    check()  # tombstones propagate through the shared bitmaps, no sync
+    idx.compact()
+    check()  # generation flip triggers a view rebuild
+    idx.ingest(rng.uniform(0, 1, (30, D)).astype(np.float32))
+    check()  # fresh active rows are visible to every lane
+    assert idx.replica_id == 0  # primary lane stamps plans as replica 0
+    assert rs.stats()["syncs"] >= 2
+
+
+def test_front_door_replicas_match_plain_index(rng):
+    idx = _index(rng, n=120, capacity=64)
+    q = rng.uniform(0, 1, (2, D)).astype(np.float32)
+    ref = idx.query(q, top_k=5)
+    fd = FrontDoor(idx, n_replicas=2, max_wait_ms=1.0)
+    for _ in range(3):
+        d, ids = fd.query(q, top_k=5, deadline_ms=10_000.0)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(ref[0]))
+        np.testing.assert_array_equal(ids, ref[1])
+
+
+def test_routing_avoids_busy_and_slow_lanes(rng):
+    idx = _index(rng, n=40)
+    rs = ReplicaSet(idx, n_replicas=3)
+    # all idle: lowest index wins
+    assert rs._pick() == 0
+    for lane in rs.lanes:
+        lane.inflight = 0
+    # busy lane 0: route around it
+    rs.lanes[0].inflight = 2
+    assert rs._pick() == 1
+    for lane in rs.lanes:
+        lane.inflight = 0
+    # equally loaded, lane 0 measured decisively slower: EWMA flips it
+    rs.lanes[0].ewma_ms, rs.lanes[0].samples = 100.0, 3
+    rs.lanes[1].ewma_ms, rs.lanes[1].samples = 10.0, 3
+    assert rs._pick() == 1
+    for lane in rs.lanes:
+        lane.inflight = 0
+    # within hysteresis: no flap
+    rs.lanes[0].ewma_ms = 12.0
+    assert rs._pick() == 0
+    for lane in rs.lanes:
+        lane.inflight = 0
+    # too few samples never flips
+    rs.lanes[2].ewma_ms, rs.lanes[2].samples = 0.1, 1
+    assert rs._pick() == 0
+
+
+def test_replica_validation():
+    idx = SketchIndex(CFG)
+    with pytest.raises(ValueError):
+        ReplicaSet(idx, n_replicas=0)
+    with pytest.raises(ValueError):
+        ReplicaSet(idx, n_replicas=2, replica_devices=[[None]])
+    rs = ReplicaSet(idx, n_replicas=2)
+    with pytest.raises(ValueError):
+        rs.query(np.zeros((1, D), np.float32), replica=5)
+
+
+def test_serving_mesh_replica_axis():
+    mesh = make_serving_mesh(1)
+    rows = mesh_replica_devices(mesh)
+    assert len(rows) == 1 and rows[0] == [mesh.devices[0, 0]]
+    # explicit-devices form with a replica axis needs R*N devices
+    with pytest.raises(ValueError):
+        make_serving_mesh(2, devices=[jax.devices()[0]], n_replicas=2)
+
+
+# ------------------------------------------------------- planner deadlines
+
+
+def test_planner_deadline_flip_is_measured_and_explained():
+    p = QueryPlanner()
+    plan = p.plan(reduce="topk", estimator="plain", sharded=True,
+                  mesh_available=True, record=False)
+    assert plan.route == "stacked"
+    # seed the cost model: stacked 8ms, dispatch 6ms (3+ samples each) —
+    # inside the 1.5x hysteresis band, so cost alone never flips
+    for _ in range(3):
+        p.observe(plan, "stacked", 8.0)
+        p.observe(plan, "dispatch", 6.0)
+    assert p.plan(reduce="topk", estimator="plain", sharded=True,
+                  mesh_available=True).route == "stacked"
+    tight = p.plan(reduce="topk", estimator="plain", sharded=True,
+                   mesh_available=True, deadline_ms=7.0, replica=1)
+    assert tight.route == "dispatch" and tight.fallbacks == ("stacked",)
+    assert "deadline" in tight.reason
+    assert tight.deadline_ms == 7.0 and tight.replica == 1
+    assert "deadline=7ms" in tight.describe()
+    assert "replica=1" in tight.describe()
+    # budget neither route fits -> static preference stands (no drop here;
+    # the front door accounts the overrun)
+    assert p.plan(reduce="topk", estimator="plain", sharded=True,
+                  mesh_available=True, deadline_ms=1.0).route == "stacked"
+    # generous budget: no flip
+    assert p.plan(reduce="topk", estimator="plain", sharded=True,
+                  mesh_available=True, deadline_ms=50.0).route == "stacked"
+
+
+def test_planner_deadline_validation():
+    p = QueryPlanner()
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError):
+            p.plan(reduce="topk", estimator="plain", sharded=False,
+                   deadline_ms=bad)
+
+
+def test_deadline_threads_to_plan_through_index(rng):
+    idx = _index(rng, n=40)
+    idx.query(rng.uniform(0, 1, (1, D)).astype(np.float32), top_k=3,
+              deadline_ms=250.0)
+    plan = idx.planner.last_plan
+    assert plan.deadline_ms == 250.0 and plan.route == "dense"

@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Keep the docs honest: link check + quick-start smoke test.
+
+Two gates, both run by the CI ``docs`` job from the repo root:
+
+1. Every intra-repo markdown link in ``README.md`` and ``docs/*.md`` must
+   resolve — the target file exists, and if the link carries a
+   ``#fragment`` the target file has a heading whose GitHub anchor slug
+   matches.
+2. The operator handbook's quick-start command block (the first ```bash
+   fence in ``docs/serving.md``) is executed as a smoke test, so the
+   first command an operator copy-pastes is known to work.
+
+Usage::
+
+    python tools/check_docs.py              # links + smoke
+    python tools/check_docs.py --links-only # skip the smoke run
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Markdown inline links: [text](target). Deliberately no support for
+# reference-style links — the repo doesn't use them.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+
+
+def doc_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def _strip_fences(text: str) -> list[str]:
+    """Return the lines of ``text`` that sit outside fenced code blocks."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return out
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading line's text."""
+    text = heading.strip()
+    text = text.replace("`", "")                       # inline code markers
+    text = re.sub(r"\*\*?|__?", "", text)              # bold/italic markers
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # links -> text
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)               # drop punctuation
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    slugs: dict[str, int] = {}
+    out: set[str] = set()
+    for line in _strip_fences(path.read_text()):
+        m = _HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_links(files: list[Path]) -> list[str]:
+    errors: list[str] = []
+    anchor_cache: dict[Path, set[str]] = {}
+    for src in files:
+        body = "\n".join(_strip_fences(src.read_text()))
+        for target in _LINK_RE.findall(body):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = src if not path_part else (src.parent / path_part).resolve()
+            rel = src.relative_to(REPO)
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if not frag:
+                continue
+            if dest.suffix != ".md":
+                errors.append(f"{rel}: anchor on non-markdown target -> {target}")
+                continue
+            if dest not in anchor_cache:
+                anchor_cache[dest] = anchors_of(dest)
+            if frag not in anchor_cache[dest]:
+                errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def quickstart_block() -> str:
+    """The first ```bash fence in the operator handbook."""
+    text = (REPO / "docs" / "serving.md").read_text()
+    m = re.search(r"```bash\n(.*?)```", text, re.DOTALL)
+    if not m:
+        raise SystemExit("docs/serving.md has no ```bash quick-start fence")
+    return m.group(1)
+
+
+def run_quickstart() -> int:
+    block = quickstart_block()
+    print("-- running docs/serving.md quick-start block --")
+    print(block.strip())
+    proc = subprocess.run(
+        ["bash", "-euo", "pipefail", "-c", block], cwd=REPO, timeout=600
+    )
+    return proc.returncode
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--links-only", action="store_true",
+                    help="check links, skip the quick-start smoke run")
+    args = ap.parse_args()
+
+    files = doc_files()
+    errors = check_links(files)
+    for e in errors:
+        print(f"LINK ERROR: {e}", file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    if errors:
+        return 1
+
+    if not args.links_only:
+        rc = run_quickstart()
+        if rc != 0:
+            print(f"SMOKE ERROR: quick-start block exited {rc}", file=sys.stderr)
+            return 1
+        print("quick-start smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
