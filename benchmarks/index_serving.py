@@ -37,6 +37,12 @@ Emits the harness CSV rows (name,us_per_call,derived):
                       answers are asserted bit-identical to the bare index
                       and one starved tenant must shed with a typed
                       Overloaded before timing starts
+  stable_ingest       us per fractional-p (p=1.5, α-stable) ingest batch
+                      through the stable_sparse gather path, derived =
+                      rows_per_s|dense_us — dense_us is the same corpus
+                      ingested through the dense stable family, and the
+                      gather vs scatter-materialized tiles are asserted
+                      allclose before timing starts
   rebalance           us per skew-healing migration pass (skewed corpus:
                       heavy deletes on most shards, compact, rebalance),
                       derived = moved|skew_before|skew_after
@@ -175,6 +181,45 @@ def run():
     rows.append(("front_door", p50f * 1e3,
                  f"p50_ms={p50f:.2f}|admitted={sched['admitted']}"
                  f"|shed={sched['shed']}|replicas=2"))
+
+    # fractional-p ingest: α-stable sketches (p=1.5) through the same index
+    # write path.  The stable_sparse family gathers nnz (index, value)
+    # pairs per D-block instead of the dense (block_d x k) matmul; the row
+    # times the sparse ingest with the dense-family ingest in derived.
+    # Parity first: the gather ingest and the dense scatter-materialized
+    # tiles must describe the same R (equal up to fp re-association)
+    from repro.core import ProjectionSpec
+    from repro.kernels.power_project.ops import sketch_via_kernel
+
+    bd = min(1024, d)
+    s_cfg = SketchConfig(p=1.5, k=k, block_d=bd,
+                         projection=ProjectionSpec(family="stable_sparse",
+                                                   block_d=bd))
+    dn_cfg = SketchConfig(p=1.5, k=k, block_d=bd,
+                          projection=ProjectionSpec(family="stable",
+                                                    block_d=bd))
+    s_idx = SketchIndex(s_cfg, index_cfg=IndexConfig(segment_capacity=cap))
+    dn_idx = SketchIndex(dn_cfg, index_cfg=IndexConfig(segment_capacity=cap))
+    gat = sketch_rows(jnp.asarray(X[:batch]), s_idx.key, s_cfg)
+    sca = sketch_via_kernel(jnp.asarray(X[:batch]), s_idx.key, s_cfg)
+    np.testing.assert_allclose(np.asarray(gat.U), np.asarray(sca.U),
+                               rtol=2e-4, atol=2e-4)
+    s_idx.ingest(jnp.asarray(X[:batch]))   # warmup: compile both write paths
+    dn_idx.ingest(jnp.asarray(X[:batch]))
+    t_sp, t_dn = [], []
+    for lo in range(batch, n, batch):
+        xb = jnp.asarray(X[lo:lo + batch])
+        t0 = time.perf_counter()
+        s_idx.ingest(xb)
+        t_sp.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        dn_idx.ingest(xb)
+        t_dn.append(time.perf_counter() - t0)
+    sparse_us = float(np.sum(t_sp)) / max(len(t_sp), 1) * 1e6
+    dense_us = float(np.sum(t_dn)) / max(len(t_dn), 1) * 1e6
+    rows.append(("stable_ingest", sparse_us,
+                 f"rows_per_s={batch / max(sparse_us, 1e-9) * 1e6:.0f}"
+                 f"|dense_us={dense_us:.0f}"))
 
     if _mesh_enabled():
         # sharded smoke: same corpus spread over the 1xN serving mesh via

@@ -1,12 +1,17 @@
-"""Core of the reproduction: even-p l_p distance sketching (Ping Li, 2008).
+"""Core of the reproduction: l_p distance sketching (Ping Li, 2008).
 
 Public API:
 
+  registry:       EstimatorSpec, RouteCapabilities, register_estimator,
+                  resolve — the (p, projection, estimator) capability model
   decomposition:  lp_coefficients, interaction_orders, exact_lp_distance,
                   exact_lp_distance_decomposed, exact_pairwise_lp, power_moments
-  projections:    ProjectionSpec, projection_block, projection_matrix
-  sketch:         SketchConfig, LpSketch, sketch
+  projections:    ProjectionSpec, projection_block, projection_sparse_block,
+                  projection_matrix
+  sketch:         SketchConfig, LpSketch, sketch, sketch_moments
   estimators:     estimate, estimate_margin_mle, margin_mle_root
+  stable:         pairwise_geometric_mean, estimate_geometric_mean,
+                  gm_relative_variance, exact_fractional_lp (fractional p)
   variance:       variance_plain, variance_margin_mle, delta_basic_vs_alternative
   pairwise:       pairwise_distances, pairwise_margin_mle, knn, pack_sketch
   distributed:    sketch_sharded, pairwise_sharded, knn_sharded
@@ -15,6 +20,7 @@ All O(n·m) pairwise work (knn, the sharded strips, data/dedup) streams
 through ``repro.engine`` — see that package for the strip/reduction engine.
 """
 
+from . import registry
 from .decomposition import (
     exact_lp_distance,
     exact_lp_distance_decomposed,
@@ -27,17 +33,35 @@ from .decomposition import (
 from .distributed import knn_sharded, pairwise_sharded, sketch_sharded
 from .estimators import estimate, estimate_margin_mle, margin_mle_root
 from .pairwise import knn, pack_sketch, pairwise_distances, pairwise_margin_mle
-from .projections import ProjectionSpec, fourth_moment, projection_block, projection_matrix
-from .sketch import LpSketch, SketchConfig, sketch
+from .projections import (
+    ProjectionSpec,
+    fourth_moment,
+    projection_block,
+    projection_matrix,
+    projection_sparse_block,
+)
+from .registry import EstimatorSpec, RouteCapabilities, register_estimator, resolve
+from .sketch import LpSketch, SketchConfig, sketch, sketch_moments
+from .stable import (
+    estimate_geometric_mean,
+    exact_fractional_lp,
+    gm_relative_variance,
+    pairwise_geometric_mean,
+    variance_geometric_mean,
+)
 from .variance import delta_basic_vs_alternative, variance_margin_mle, variance_plain
 
 __all__ = [
+    "registry", "EstimatorSpec", "RouteCapabilities", "register_estimator",
+    "resolve",
     "lp_coefficients", "interaction_orders", "exact_lp_distance",
     "exact_lp_distance_decomposed", "exact_pairwise_lp", "power_moments",
     "mixed_moment", "ProjectionSpec", "fourth_moment", "projection_block",
-    "projection_matrix", "SketchConfig", "LpSketch", "sketch", "estimate",
-    "estimate_margin_mle", "margin_mle_root", "variance_plain",
-    "variance_margin_mle", "delta_basic_vs_alternative", "pairwise_distances",
-    "pairwise_margin_mle", "knn", "pack_sketch", "sketch_sharded",
-    "pairwise_sharded", "knn_sharded",
+    "projection_sparse_block", "projection_matrix", "SketchConfig", "LpSketch",
+    "sketch", "sketch_moments", "estimate", "estimate_margin_mle",
+    "margin_mle_root", "variance_plain", "variance_margin_mle",
+    "delta_basic_vs_alternative", "pairwise_distances", "pairwise_margin_mle",
+    "knn", "pack_sketch", "sketch_sharded", "pairwise_sharded", "knn_sharded",
+    "pairwise_geometric_mean", "estimate_geometric_mean",
+    "variance_geometric_mean", "gm_relative_variance", "exact_fractional_lp",
 ]

@@ -19,6 +19,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .registry import EVEN_P
+
 __all__ = [
     "lp_coefficients",
     "interaction_orders",
@@ -31,8 +33,9 @@ __all__ = [
 
 
 def _check_even_p(p: int) -> None:
-    if p < 2 or p % 2 != 0:
-        raise ValueError(f"the decomposition requires even p >= 2, got p={p}")
+    # one shared domain object (repro.core.registry.EVEN_P) owns the check
+    # and the error wording — estimator specs declare the same domains
+    EVEN_P.check(p, what="the decomposition")
 
 
 def lp_coefficients(p: int) -> tuple[int, ...]:

@@ -28,9 +28,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import pcast, shard_map
 
-from .decomposition import power_moments
 from .pairwise import pack_sketch
-from .sketch import LpSketch, SketchConfig, sketch
+from .sketch import LpSketch, SketchConfig, sketch, sketch_moments
 
 __all__ = [
     "sketch_sharded",
@@ -134,11 +133,11 @@ def sketch_sharded(
             U, M = carry
             gidx = midx * blocks_per_shard + i
             U = U + sketch_block_contrib(xb[:, i], gidx, key, cfg)
-            M = M + power_moments(xb[:, i], cfg.p)
+            M = M + sketch_moments(xb[:, i], cfg)
             return (U, M), None
 
         U0 = jnp.zeros((nloc, cfg.vectors_per_row, cfg.k), cfg.projection.dtype)
-        M0 = jnp.zeros((nloc, cfg.p - 1), jnp.float32)
+        M0 = jnp.zeros((nloc, cfg.num_moments), jnp.float32)
         U0 = pcast(U0, (*data_axes, model_axis), to="varying")
         M0 = pcast(M0, (*data_axes, model_axis), to="varying")
         (U, M), _ = jax.lax.scan(body, (U0, M0), jnp.arange(blocks_per_shard))

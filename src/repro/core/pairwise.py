@@ -135,9 +135,11 @@ def knn(
     """
     from repro.engine import pairwise as engine_pairwise  # lazy: avoids cycle
 
+    from . import registry
+
     return engine_pairwise(
         queries, corpus, cfg,
         reduce="topk", top_k=top_k,
-        estimator="mle" if mle else "plain",
+        estimator=registry.MARGIN_MLE if mle else registry.DEFAULT_ESTIMATOR,
         engine=engine_cfg,
     )

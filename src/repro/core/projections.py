@@ -1,6 +1,7 @@
-"""Random projection families (paper §2.1 / §4).
+"""Random projection families (paper §2.1 / §4 + the α-stable lineage).
 
-Three families, all zero-mean unit-variance with fourth moment ``s``:
+Three dense sub-Gaussian families, all zero-mean unit-variance with fourth
+moment ``s``:
 
 - ``normal``:     r ~ N(0, 1),                    s = 3   (paper §2)
 - ``uniform``:    r ~ Uniform(-sqrt(3), sqrt(3)), s = 9/5 (paper §4)
@@ -8,24 +9,49 @@ Three families, all zero-mean unit-variance with fourth moment ``s``:
                   s >= 1 — the sparse sub-Gaussian family of Achlioptas
                   (s = 3 gives the classic {+-sqrt(3), 0} projection).
 
+Two α-stable families for fractional 0 < p <= 2 (``alpha`` = p):
+
+- ``stable``:        r ~ S(alpha, 1), the symmetric α-stable law drawn with
+                     the Chambers–Mallows–Stuck transform — ``x @ R`` columns
+                     are S(alpha, ||x||_alpha), the basis of the
+                     geometric-mean estimator (Li arXiv:0806.4422).
+- ``stable_sparse``: the very sparse variant (Li cs/0611114): each of the k
+                     projection columns holds ``max(1, round(density * bd))``
+                     nonzero stable entries per row block, scaled by
+                     ``(bd/m)^(1/alpha)`` so column scales match the dense
+                     family in expectation; ingest FLOPs drop by ~1/density.
+
 R is never required to be materialized at full (D, k): ``projection_block``
 derives any (row-block, k) tile from a counter-based PRNG key, so distributed
 shards and Pallas kernel tiles regenerate exactly the same R tile from
 (seed, block index) — the paper's small-space property, kept on device.
+``projection_sparse_block`` exposes the sparse family's (indices, values)
+pairs directly so the ingest path can gather instead of densifying;
+``projection_block`` scatter-adds the SAME pairs, so the two paths agree.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ProjectionSpec", "fourth_moment", "projection_block", "projection_matrix"]
+__all__ = [
+    "ProjectionSpec",
+    "STABLE_FAMILIES",
+    "fourth_moment",
+    "projection_block",
+    "projection_sparse_block",
+    "projection_matrix",
+]
 
-_FAMILIES = ("normal", "uniform", "threepoint")
+STABLE_FAMILIES = ("stable", "stable_sparse")
+_SUBGAUSSIAN_FAMILIES = ("normal", "uniform", "threepoint")
+_FAMILIES = _SUBGAUSSIAN_FAMILIES + STABLE_FAMILIES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,29 +59,78 @@ class ProjectionSpec:
     """Which projection family to draw R from.
 
     Attributes:
-      family: one of ``normal`` / ``uniform`` / ``threepoint``.
+      family: one of ``normal`` / ``uniform`` / ``threepoint`` /
+        ``stable`` / ``stable_sparse``.
       s: fourth moment for ``threepoint`` (ignored otherwise; must be >= 1).
       dtype: dtype of the generated R entries.
       block_d: row-block size used when streaming over the D axis.
+      alpha: stability index for the stable families (0 < alpha <= 2;
+        ``SketchConfig`` pins it to p).  Ignored by sub-Gaussian families.
+      density: nonzero fraction per projection column per row block for
+        ``stable_sparse`` (0 < density <= 1).  Ignored otherwise.
     """
 
     family: str = "normal"
     s: float = 3.0
     dtype: jnp.dtype = jnp.float32
     block_d: int = 2048
+    alpha: float = 2.0
+    density: float = 0.05
 
     def __post_init__(self):
         if self.family not in _FAMILIES:
             raise ValueError(f"unknown projection family {self.family!r}")
         if self.family == "threepoint" and self.s < 1.0:
             raise ValueError("three-point SubG(s) requires s >= 1")
+        if self.family in STABLE_FAMILIES and not 0.0 < self.alpha <= 2.0:
+            raise ValueError(
+                f"stable projections require 0 < alpha <= 2, got {self.alpha}")
+        if self.family == "stable_sparse" and not 0.0 < self.density <= 1.0:
+            raise ValueError(
+                f"stable_sparse requires 0 < density <= 1, got {self.density}")
+
+    @property
+    def is_stable(self) -> bool:
+        return self.family in STABLE_FAMILIES
+
+    def nnz_per_column(self, block_rows: int) -> int:
+        """Nonzeros per projection column in one ``block_rows`` tile
+        (``stable_sparse`` only)."""
+        return max(1, round(self.density * block_rows))
 
 
 def fourth_moment(spec: ProjectionSpec) -> float:
-    """E[r^4] = s for the family (enters the Lemma 6 variance)."""
+    """E[r^4] = s for the sub-Gaussian families (enters the Lemma 6
+    variance).  Undefined for α-stable families (heavy tails)."""
+    if spec.is_stable:
+        raise ValueError(
+            f"fourth_moment is undefined for the {spec.family!r} family "
+            f"(α-stable draws have infinite fourth moment for alpha < 2)")
     return {"normal": 3.0, "uniform": 9.0 / 5.0, "threepoint": float(spec.s)}[
         spec.family
     ]
+
+
+def _stable_draw(key: jax.Array, shape, alpha: float, dtype) -> jax.Array:
+    """Symmetric α-stable S(alpha, 1) draws via Chambers–Mallows–Stuck.
+
+    ``alpha`` is static (it lives on the frozen spec), so the alpha == 1
+    Cauchy special case is a Python branch, not a traced one.  alpha == 2
+    yields S(2, 1) = N(0, 2) — the geometric-mean constant accounts for
+    the scale convention, so no renormalization happens here.
+    """
+    k_theta, k_w = jax.random.split(key)
+    theta = jax.random.uniform(
+        k_theta, shape, jnp.float32,
+        minval=-math.pi / 2.0, maxval=math.pi / 2.0)
+    w = jnp.maximum(jax.random.exponential(k_w, shape, jnp.float32), 1e-30)
+    if alpha == 1.0:
+        r = jnp.tan(theta)
+    else:
+        inv_a = 1.0 / alpha
+        r = (jnp.sin(alpha * theta) / jnp.cos(theta) ** inv_a
+             * (jnp.cos(theta * (1.0 - alpha)) / w) ** ((1.0 - alpha) * inv_a))
+    return r.astype(dtype)
 
 
 def _draw(key: jax.Array, shape, spec: ProjectionSpec) -> jax.Array:
@@ -66,11 +141,44 @@ def _draw(key: jax.Array, shape, spec: ProjectionSpec) -> jax.Array:
             key, shape, spec.dtype, minval=-jnp.sqrt(3.0), maxval=jnp.sqrt(3.0)
         )
         return r
+    if spec.family == "stable":
+        return _stable_draw(key, shape, float(spec.alpha), spec.dtype)
+    if spec.family == "stable_sparse":
+        raise ValueError(
+            "stable_sparse tiles are assembled from (indices, values) pairs "
+            "— use projection_block / projection_sparse_block")
     # three-point SubG(s): sqrt(s) * sign w.p. 1/(2s) each, 0 w.p. 1 - 1/s
     s = jnp.asarray(spec.s, spec.dtype)
     u = jax.random.uniform(key, shape, spec.dtype)
     sign = jnp.where(u < 1.0 / (2.0 * s), -1.0, jnp.where(u < 1.0 / s, 1.0, 0.0))
     return jnp.sqrt(s) * sign.astype(spec.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "k", "spec"))
+def projection_sparse_block(
+    key: jax.Array, block_index: jax.Array, block_rows: int, k: int,
+    spec: ProjectionSpec
+) -> tuple:
+    """The sparse tile as ``(idx (m, k) int32, vals (m, k))``.
+
+    Column j of the tile holds ``vals[:, j]`` at rows ``idx[:, j]``
+    (duplicate rows accumulate).  ``m = spec.nnz_per_column(block_rows)``;
+    values are stable draws scaled by ``(block_rows / m)^(1/alpha)`` so the
+    column's α-scale matches the dense ``stable`` family in expectation
+    over the index draw.  Deterministic in (key, block_index) exactly like
+    :func:`projection_block`.
+    """
+    if spec.family != "stable_sparse":
+        raise ValueError(
+            f"projection_sparse_block needs the stable_sparse family, "
+            f"got {spec.family!r}")
+    m = spec.nnz_per_column(block_rows)
+    bkey = jax.random.fold_in(key, block_index)
+    k_idx, k_val = jax.random.split(bkey)
+    idx = jax.random.randint(k_idx, (m, k), 0, block_rows, jnp.int32)
+    scale = (block_rows / m) ** (1.0 / float(spec.alpha))
+    vals = _stable_draw(k_val, (m, k), float(spec.alpha), spec.dtype) * scale
+    return idx, vals.astype(spec.dtype)
 
 
 @partial(jax.jit, static_argnames=("block_rows", "k", "spec"))
@@ -80,8 +188,16 @@ def projection_block(
     """The (block_rows, k) tile of R covering rows [block_index*block_rows, ...).
 
     Deterministic in (key, block_index): every shard / kernel tile regenerates
-    the same R rows without storing R.
+    the same R rows without storing R.  For ``stable_sparse`` the tile is the
+    dense materialization (scatter-add) of the exact pairs
+    :func:`projection_sparse_block` returns, so the gather-based sparse
+    ingest path and this dense tile describe the same matrix.
     """
+    if spec.family == "stable_sparse":
+        idx, vals = projection_sparse_block(key, block_index, block_rows, k,
+                                            spec)
+        cols = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), idx.shape)
+        return jnp.zeros((block_rows, k), spec.dtype).at[idx, cols].add(vals)
     bkey = jax.random.fold_in(key, block_index)
     return _draw(bkey, (block_rows, k), spec)
 

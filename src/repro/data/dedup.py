@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import engine
-from repro.core import LpSketch, SketchConfig, sketch
+from repro.core import LpSketch, SketchConfig, registry, sketch
 from repro.index import SketchReservoir
 
 __all__ = ["SketchDedup", "featurize_tokens"]
@@ -71,7 +71,8 @@ class SketchDedup:
         # pairs under the relative radius survive — never a (B, B) matrix
         r, c = engine.pairwise(
             sk, None, self.cfg, reduce="threshold",
-            radius=self.threshold, relative=True, estimator="mle",
+            radius=self.threshold, relative=True,
+            estimator=registry.MARGIN_MLE,
         )
         dup_in_batch = np.zeros(B, bool)
         dup_in_batch[r[c < r]] = True  # only earlier-in-batch neighbors count
@@ -83,7 +84,8 @@ class SketchDedup:
             res_sk, live = self._res.view()
             rr, cc = engine.pairwise(
                 sk, res_sk, self.cfg, reduce="threshold",
-                radius=self.threshold, relative=True, estimator="mle",
+                radius=self.threshold, relative=True,
+                estimator=registry.MARGIN_MLE,
             )
             dup_vs_res[rr[live[cc]]] = True
         keep = ~(dup_in_batch | dup_vs_res)

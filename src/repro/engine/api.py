@@ -12,9 +12,13 @@ materializes on device:
   reduce="full"       legacy dense output, assembled strip-by-strip in host
                       memory (returned as a NumPy array)
 
-``estimator="mle"`` swaps the plain packed-matmul strip for the margin-MLE
-strip (Lemma 4 per-term Newton refinement via ``pairwise_margin_mle`` on the
-row-sliced sketches) — same streaming reductions apply.
+``estimator=`` names a spec in ``repro.core.registry``; it is resolved ONCE
+here at the API boundary (validating (p, projection family) against the
+spec's declared domain) and the strip kind follows the spec: packed-factor
+matmul strips when ``spec.uses_packed``, otherwise the spec's own strip
+function (``spec.pairwise``) on the row-sliced raw sketches — margin-MLE
+Newton strips, geometric-mean strips over α-stable sketches, or whatever a
+registered extension provides.  The same streaming reductions apply to all.
 
 On CPU with the default ``xla`` backend every reduction is bit-identical to
 the dense ``pairwise_distances``/``knn`` path: strip blocking never splits
@@ -30,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.core.pairwise import pack_sketch, pairwise_margin_mle
+from repro.core import registry
+from repro.core.pairwise import pack_sketch
 from repro.core.sketch import LpSketch, SketchConfig
 
 from .backends import strip_distances
@@ -40,7 +45,6 @@ from .reduce import streaming_topk_strips, strip_bounds
 __all__ = ["pairwise"]
 
 _REDUCES = ("full", "topk", "threshold")
-_ESTIMATORS = ("plain", "mle")
 
 
 def _rows(sk: LpSketch, r0: int, r1: int) -> LpSketch:
@@ -56,7 +60,7 @@ def pairwise(
     top_k: int = 10,
     radius: Optional[float] = None,
     relative: bool = False,
-    estimator: str = "plain",
+    estimator: str = registry.DEFAULT_ESTIMATOR,
     clip: bool = True,
     zero_diag: bool = False,
     engine: Optional[EngineConfig] = None,
@@ -72,8 +76,8 @@ def pairwise(
       radius: threshold for reduce="threshold"; pairs with D < radius are
         returned.  With ``relative=True`` the test is
         D < radius * (||x_i||_p^p + ||y_j||_p^p) — the dedup criterion.
-      estimator: "plain" (packed single-matmul strips) or "mle"
-        (margin-MLE strips, Lemma 4).
+      estimator: a name registered in ``repro.core.registry`` (see
+        ``registry.names()``) — resolved once, here.
       clip: clamp estimates at 0 (both dense paths default to this).
       zero_diag: reduce="full" + self-pairs only — zero the diagonal.
       engine: block sizes / backend override (platform defaults otherwise).
@@ -86,8 +90,8 @@ def pairwise(
     """
     if reduce not in _REDUCES:
         raise ValueError(f"reduce must be one of {_REDUCES}, got {reduce!r}")
-    if estimator not in _ESTIMATORS:
-        raise ValueError(f"estimator must be one of {_ESTIMATORS}, got {estimator!r}")
+    spec = registry.resolve(estimator, p=cfg.p,
+                            projection=cfg.projection.family)
     if reduce == "threshold" and radius is None:
         raise ValueError("reduce='threshold' requires a radius")
 
@@ -98,7 +102,7 @@ def pairwise(
     sb_ = sa if self_pairs else sb
     n, m = sa.n, sb_.n
 
-    if estimator == "plain":
+    if spec.uses_packed:
         A, _, na = pack_sketch(sa, cfg)
         _, B, nb = pack_sketch(sb_, cfg)
 
@@ -111,7 +115,7 @@ def pairwise(
         na, nb = sa.norm_pp(cfg.p), sb_.norm_pp(cfg.p)
 
         def strip(r0, r1, c0, c1):
-            return pairwise_margin_mle(
+            return spec.pairwise(
                 _rows(sa, r0, r1), _rows(sb_, c0, c1), cfg, clip=clip
             )
 

@@ -13,21 +13,27 @@ The serving stack grew four execution paths for the same two reduces:
             serving mesh, bitwise invariant to the re-tiling for the plain
             estimator only.
 
-Route choice used to live in scattered ``if self._fan_mesh is not None and
-estimator == "plain"`` branches; this module replaces them with an explicit
-:class:`QueryPlan` — the chosen route plus a fallback chain — so the
-executors in ``ShardedSketchIndex`` just walk ``plan.chain`` until a route
-serves the query.  Three contracts are encoded here and nowhere else:
+Route choice used to live in scattered estimator-name special cases; this
+module replaces them with an explicit :class:`QueryPlan` — the chosen route
+plus a fallback chain — so the executors in ``ShardedSketchIndex`` just walk
+``plan.chain`` until a route serves the query.  Eligibility is read from the
+estimator's declared :class:`repro.core.registry.RouteCapabilities`, never
+from its name: ``stacked_topk`` / ``stacked_threshold`` say whether a
+stacked shard_map program exists at all, and ``fused_bitwise_stable`` says
+whether its answers survive the re-tiling bit-for-bit.  Three contracts are
+encoded here and nowhere else:
 
   * **Bit-exactness is the default.**  A plan without an
     :class:`ApproxContract` only ever uses routes that are bit-identical to
-    the single-host answer: plain may ride the stacked fan (the strip
-    tiling is a proven no-op for packed-matmul strips), mle stays on the
-    dispatch fan's exact per-segment strip programs.
+    the single-host answer: a ``fused_bitwise_stable`` estimator may ride
+    the stacked fan (the strip tiling is a proven no-op for packed-matmul
+    strips), everything else stays on the dispatch fan's exact per-segment
+    strip programs.
   * **``approx_ok`` is an opt-in, asserted bound.**  Margin-MLE's Newton
     strips are not bitwise stable under the stacked re-tiling (~2e-5
-    relative drift measured); passing ``approx_ok=ApproxContract(...)``
-    lets mle top-k ride the stacked fan, but only after a one-time
+    relative drift measured — the declared ``fused_bitwise_stable=False``);
+    passing ``approx_ok=ApproxContract(...)`` lets such an estimator's
+    top-k ride its stacked program, but only after a one-time
     conformance gate per operand snapshot proves the stacked answer agrees
     with the exact dispatch answer within (rtol, atol).  A failed gate is
     memoized and the stack serves via dispatch — drift never reaches a
@@ -53,12 +59,12 @@ import math
 import threading
 from typing import Dict, Hashable, Optional, Tuple
 
+from repro.core import registry
 from repro.obs.metrics import REGISTRY
 
 __all__ = ["ApproxContract", "QueryPlan", "QueryPlanner", "STAGE1_LABEL"]
 
 REDUCES = ("topk", "threshold")
-ESTIMATORS = ("plain", "mle")
 ROUTES = ("stacked", "dispatch", "dense")
 
 # stats()/span vocabulary predates the planner: the stacked shard_map fan
@@ -106,7 +112,7 @@ class ApproxContract:
 
         >>> from repro.index.planner import ApproxContract
         >>> contract = ApproxContract(rtol=1e-4, atol=1e-5)
-        >>> # index.query(X, estimator="mle", approx_ok=contract)
+        >>> # index.query(X, estimator=registry.MARGIN_MLE, approx_ok=contract)
         >>> contract.rtol
         0.0001
     """
@@ -139,7 +145,9 @@ class QueryPlan:
     Example::
 
         >>> from repro.index.planner import QueryPlanner
-        >>> plan = QueryPlanner().plan(reduce="topk", estimator="plain",
+        >>> from repro.core import registry
+        >>> plan = QueryPlanner().plan(reduce="topk",
+        ...                            estimator=registry.DEFAULT_ESTIMATOR,
         ...                            sharded=False)
         >>> plan.route
         'dense'
@@ -184,10 +192,11 @@ class QueryPlanner:
 
     Example (plan → execute → feed the cost model)::
 
+        >>> from repro.core import registry
         >>> from repro.index.planner import QueryPlanner
         >>> p = QueryPlanner()
-        >>> plan = p.plan(reduce="topk", estimator="plain", sharded=True,
-        ...               mesh_available=True)
+        >>> plan = p.plan(reduce="topk", estimator=registry.DEFAULT_ESTIMATOR,
+        ...               sharded=True, mesh_available=True)
         >>> plan.chain                     # executors walk this in order
         ('stacked', 'dispatch')
         >>> p.observe(plan, "stacked", 4.2)   # served by stacked in 4.2ms
@@ -244,9 +253,7 @@ class QueryPlanner:
         """
         if reduce not in REDUCES:
             raise ValueError(f"unknown reduce {reduce!r} (want {REDUCES})")
-        if estimator not in ESTIMATORS:
-            raise ValueError(
-                f"unknown estimator {estimator!r} (want {ESTIMATORS})")
+        spec = registry.get(estimator)
         if approx_ok is not None and not isinstance(approx_ok, ApproxContract):
             raise TypeError(
                 "approx_ok must be an ApproxContract (or None for the "
@@ -260,6 +267,9 @@ class QueryPlanner:
                 " (expired budgets are rejected by the front door, never "
                 "planned)")
 
+        caps = spec.capabilities
+        has_program = (caps.stacked_topk is not None if reduce == "topk"
+                       else caps.stacked_threshold)
         if not sharded:
             plan = self._mk(reduce, estimator, "dense", (), approx_ok,
                             "single-host index: the dense fan is the route",
@@ -269,29 +279,32 @@ class QueryPlanner:
                             "no usable serving mesh: the stacked fan needs "
                             "one distinct device per shard",
                             deadline_ms, replica)
-        elif estimator == "mle" and approx_ok is None:
+        elif not caps.fused_bitwise_stable and approx_ok is None:
             plan = self._mk(reduce, estimator, "dispatch", (), approx_ok,
-                            "mle is pinned to the exact dispatch strips — "
-                            "its Newton solves are not bitwise stable under "
-                            "the stacked re-tiling (pass approx_ok to opt "
-                            "into the stacked fan)",
+                            f"estimator {spec.name!r} is pinned to the exact "
+                            "dispatch strips — its strips are not bitwise "
+                            "stable under the stacked re-tiling "
+                            "(fused_bitwise_stable=False; pass approx_ok to "
+                            "opt into a stacked program where one exists)",
                             deadline_ms, replica)
-        elif estimator == "mle" and reduce == "threshold":
+        elif not has_program:
             plan = self._mk(reduce, estimator, "dispatch", (), approx_ok,
-                            "no stacked mle threshold scan exists; dispatch "
-                            "serves mle thresholds regardless of approx_ok",
+                            f"no stacked {reduce} program is registered for "
+                            f"estimator {spec.name!r}; dispatch serves it "
+                            "regardless of approx_ok",
                             deadline_ms, replica)
         else:
-            # stacked is eligible (plain always; mle top-k under approx_ok,
+            # a stacked program exists and is admissible (bitwise-stable
+            # estimators always; others' top-k under approx_ok,
             # tolerance-gated downstream).  Dispatch stays in the chain: the
             # stacked executor declines when nothing is sealed on a shard
             # yet, or when this operand snapshot failed its approx gate.
             route, fallbacks = "stacked", ("dispatch",)
             reason = ("one shard_map fold over every shard beats "
-                      "per-segment dispatch" if estimator == "plain" else
+                      "per-segment dispatch" if caps.fused_bitwise_stable else
                       f"approx_ok(rtol={approx_ok.rtol:g}, "
-                      f"atol={approx_ok.atol:g}): mle rides the stacked "
-                      "fan, conformance-gated per snapshot")
+                      f"atol={approx_ok.atol:g}): {spec.name} rides the "
+                      "stacked fan, conformance-gated per snapshot")
             if sealed_segments == 0:
                 reason += " (nothing sealed yet: expect the dispatch "\
                           "fallback to serve)"

@@ -1,8 +1,9 @@
 """Query planning: fan the engine's fused reductions across segments.
 
 ``fan_topk`` streams each segment through the engine's strip machinery
-(plain packed-matmul strips or margin-MLE strips) with tombstones masked to
-``+inf`` *after* the strip estimate (``where`` keeps live-row values
+(packed-matmul strips when the resolved estimator spec declares
+``uses_packed``, the spec's own strip function otherwise) with tombstones
+masked to ``+inf`` *after* the strip estimate (``where`` keeps live-row values
 bit-identical), then folds the per-segment candidate lists with the engine's
 ``merge_topk``.  Tie-breaking matches a dense ``knn`` over the equivalent
 live corpus exactly: within a segment the engine resolves ties to the lowest
@@ -29,7 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.core.pairwise import pack_sketch, pairwise_margin_mle
+from repro.core import registry
+from repro.core.pairwise import pack_sketch
+from repro.core.registry import EstimatorSpec
 from repro.core.sketch import LpSketch, SketchConfig
 from repro.engine import EngineConfig, strip_distances
 from repro.engine.reduce import merge_topk, strip_bounds
@@ -93,19 +96,19 @@ def _finite_k(vals_np: np.ndarray, k_out: int) -> int:
     return min(k_out, int(np.isfinite(vals_np).sum(axis=1).min()))
 
 
-def _pack_query(qsk: LpSketch, cfg: SketchConfig, estimator: str):
+def _pack_query(qsk: LpSketch, cfg: SketchConfig, spec: EstimatorSpec):
     """Query-side factors, computed once per fan (segment-invariant)."""
-    if estimator != "plain":
+    if not spec.uses_packed:
         return None
     Aq, _, nq = pack_sketch(qsk, cfg)
     return Aq, nq
 
 
 def _segment_strip_fn(qsk: LpSketch, q_packed, seg: Segment,
-                      cfg: SketchConfig, estimator: str, backend: str):
+                      cfg: SketchConfig, spec: EstimatorSpec, backend: str):
     """strip(c0, c1) -> (q, c1-c0) masked distance strip for one segment."""
     mask = seg.mask()
-    if estimator == "plain":
+    if spec.uses_packed:
         if isinstance(seg, ActiveSegment):
             _, B, nb = pack_sketch(seg.as_sketch(), cfg)
         else:
@@ -120,7 +123,7 @@ def _segment_strip_fn(qsk: LpSketch, q_packed, seg: Segment,
         seg_sk = seg.as_sketch() if isinstance(seg, ActiveSegment) else seg.sketch
 
         def strip(c0: int, c1: int) -> jax.Array:
-            D = pairwise_margin_mle(
+            D = spec.pairwise(
                 qsk,
                 LpSketch(U=seg_sk.U[c0:c1], moments=seg_sk.moments[c0:c1]),
                 cfg, clip=True,
@@ -135,14 +138,14 @@ def _segment_rows(seg: Segment) -> int:
 
 
 def _fold_segment_topk(vals, idx, qsk, q_packed, seg: Segment,
-                       cfg: SketchConfig, estimator: str, backend: str,
+                       cfg: SketchConfig, spec: EstimatorSpec, backend: str,
                        col_block: int, base: int, k: int):
     """Fold one segment's strips into a running (q, k) candidate list, with
     columns globalized at ``base``.  The single-host fan and the sharded
     stage-1 fans both run THIS loop, so their per-segment candidates are
     identical by construction."""
     n = _segment_rows(seg)
-    strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
+    strip = _segment_strip_fn(qsk, q_packed, seg, cfg, spec, backend)
     c = min(k, n)
     # spans here time the host-side strip loop: jax dispatch is async, so
     # device compute lands in whichever span later blocks on the result
@@ -156,7 +159,7 @@ def _fold_segment_topk(vals, idx, qsk, q_packed, seg: Segment,
 
 
 def _segment_threshold_hits(qsk, q_packed, seg: Segment, cfg: SketchConfig,
-                            estimator: str, backend: str, col_block: int,
+                            spec: EstimatorSpec, backend: str, col_block: int,
                             nq_h: np.ndarray, radius: float, relative: bool):
     """One segment's (query_rows, row_ids) hit pairs, unsorted.  Shared by
     the single-host and sharded threshold scans — one copy of the radius
@@ -164,7 +167,7 @@ def _segment_threshold_hits(qsk, q_packed, seg: Segment, cfg: SketchConfig,
     n = _segment_rows(seg)
     seg_sk = seg.as_sketch() if isinstance(seg, ActiveSegment) else seg.sketch
     nb_h = np.asarray(seg_sk.norm_pp(cfg.p))
-    strip = _segment_strip_fn(qsk, q_packed, seg, cfg, estimator, backend)
+    strip = _segment_strip_fn(qsk, q_packed, seg, cfg, spec, backend)
     ids = seg.row_ids
     rows_out, ids_out = [], []
     # the radius comparison is a float32 contract: strips are float32, and the
@@ -201,13 +204,13 @@ def fan_topk(
     cfg: SketchConfig,
     *,
     top_k: int,
-    estimator: str = "plain",
+    estimator: str = registry.DEFAULT_ESTIMATOR,
     engine: Optional[EngineConfig] = None,
 ) -> Tuple[jax.Array, np.ndarray]:
     """(distances (q, k), row_ids (q, k)) over all live rows, ascending,
     k = min(top_k, total live rows).  Dead/padded rows never surface."""
-    if estimator not in ("plain", "mle"):
-        raise ValueError(f"unknown estimator {estimator!r}")
+    spec = registry.resolve(estimator, p=cfg.p,
+                            projection=cfg.projection.family)
     _check_top_k(top_k)
     backend, _, col_block = (engine or EngineConfig()).resolve()
     q = qsk.n
@@ -224,13 +227,13 @@ def fan_topk(
     idx = jnp.full((q, k_run), _IDX_SENTINEL, jnp.int32)
     base = 0
     id_map: List[np.ndarray] = []
-    q_packed = _pack_query(qsk, cfg, estimator)
+    q_packed = _pack_query(qsk, cfg, spec)
     with obs.span("index.fan.stage1", metric="index.stage1_dense_ms",
                   mode="single", segments=len(segments)):
         for seg in segments:
             n = _segment_rows(seg)
             vals, idx = _fold_segment_topk(vals, idx, qsk, q_packed, seg, cfg,
-                                           estimator, backend, col_block,
+                                           spec, backend, col_block,
                                            base, k_run)
             id_map.append(seg.row_ids[:n])
             base += n
@@ -248,17 +251,19 @@ def threshold_scan(
     *,
     radius: float,
     relative: bool = False,
-    estimator: str = "plain",
+    estimator: str = registry.DEFAULT_ESTIMATOR,
     engine: Optional[EngineConfig] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """(query_rows, row_ids) of live pairs with D < radius (optionally
     relative to the marginal-norm scale), in (query, ingest-order) order."""
+    spec = registry.resolve(estimator, p=cfg.p,
+                            projection=cfg.projection.family)
     backend, _, col_block = (engine or EngineConfig()).resolve()
     nq_h = np.asarray(qsk.norm_pp(cfg.p))
     rows_out, ids_out = [], []
-    q_packed = _pack_query(qsk, cfg, estimator)
+    q_packed = _pack_query(qsk, cfg, spec)
     for seg in segments:
-        rr, ii = _segment_threshold_hits(qsk, q_packed, seg, cfg, estimator,
+        rr, ii = _segment_threshold_hits(qsk, q_packed, seg, cfg, spec,
                                          backend, col_block, nq_h, radius,
                                          relative)
         rows_out.extend(rr)
@@ -386,7 +391,8 @@ class MicroBatcher:
             self.t_open = obs.trace.clock()  # for the queue-wait histogram
             self.deadline: Optional[float] = None  # tightest absolute deadline
 
-    def query(self, rows, top_k: int = 10, estimator: str = "plain",
+    def query(self, rows, top_k: int = 10,
+              estimator: str = registry.DEFAULT_ESTIMATOR,
               approx_ok=None, *, deadline_ms: Optional[float] = None):
         """(distances (b, k), row_ids (b, k)) for this caller's rows, with
         k = min(top_k, index live rows).  Validated up front: a malformed

@@ -214,7 +214,7 @@ class ActiveSegment:
         self.capacity = capacity
         self.U = jnp.zeros((capacity, cfg.vectors_per_row, cfg.k),
                            cfg.projection.dtype)
-        self.moments = jnp.zeros((capacity, cfg.p - 1), jnp.float32)
+        self.moments = jnp.zeros((capacity, cfg.num_moments), jnp.float32)
         self.row_ids = np.full(capacity, -1, np.int64)
         self.live = np.zeros(capacity, bool)
         self.size = 0
@@ -344,7 +344,7 @@ def pack_shard_sketch_stack(group, rows: int, cfg: SketchConfig, device=None):
     n_pad = rows - r0
     if not parts_U:
         U_blk = jnp.zeros((rows, nvec, cfg.k), jnp.dtype(cfg.projection.dtype))
-        M_blk = jnp.zeros((rows, cfg.p - 1), jnp.float32)
+        M_blk = jnp.zeros((rows, cfg.num_moments), jnp.float32)
     else:
         if n_pad:
             parts_U.append(jnp.zeros((n_pad,) + parts_U[0].shape[1:],
@@ -385,7 +385,7 @@ class SketchReservoir:
         self.capacity = capacity
         self.U = jnp.zeros((capacity, cfg.vectors_per_row, cfg.k),
                            cfg.projection.dtype)
-        self.moments = jnp.zeros((capacity, cfg.p - 1), jnp.float32)
+        self.moments = jnp.zeros((capacity, cfg.num_moments), jnp.float32)
         self.count = 0  # total rows ever admitted
 
     @property

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.core import registry
 from repro.core.sketch import LpSketch, SketchConfig, sketch
 from repro.engine import EngineConfig
 from repro.obs.metrics import REGISTRY
@@ -487,15 +488,17 @@ class SketchIndex:
     # ------------------------------------------------------------------ query
 
     def query(self, rows: jax.Array, top_k: int = 10,
-              estimator: str = "plain", *,
+              estimator: str = registry.DEFAULT_ESTIMATOR, *,
               approx_ok: Optional[ApproxContract] = None,
               deadline_ms: Optional[float] = None
               ) -> Tuple[jax.Array, np.ndarray]:
         """Top-k live neighbors of (q, D) query rows.
 
         Returns (distances (q, k), row_ids (q, k)), ascending,
-        k = min(top_k, live rows).  ``estimator="mle"`` routes margin-MLE
-        strips (Lemma 4) instead of plain packed-matmul strips.
+        k = min(top_k, live rows).  ``estimator`` names a spec in
+        ``repro.core.registry`` (margin-MLE strips, geometric-mean strips
+        over α-stable sketches, ...) and defaults to the plain packed
+        estimator.
         ``approx_ok`` opts into the planner's tolerance contract (sharded
         indexes may then serve mle from the stacked fan); the single-host
         fan is exact regardless, so it accepts and ignores the contract.
@@ -508,7 +511,7 @@ class SketchIndex:
                                  approx_ok=approx_ok, deadline_ms=deadline_ms)
 
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
-                     estimator: str = "plain", *,
+                     estimator: str = registry.DEFAULT_ESTIMATOR, *,
                      approx_ok: Optional[ApproxContract] = None,
                      deadline_ms: Optional[float] = None):
         with obs.span("index.query", metric="index.query_ms", kind="topk",
@@ -526,7 +529,8 @@ class SketchIndex:
             return out
 
     def query_threshold(self, rows: jax.Array, radius: float, *,
-                        relative: bool = False, estimator: str = "plain",
+                        relative: bool = False,
+                        estimator: str = registry.DEFAULT_ESTIMATOR,
                         approx_ok: Optional[ApproxContract] = None,
                         deadline_ms: Optional[float] = None):
         """(query_rows, row_ids) of live rows with D < radius."""
@@ -539,7 +543,7 @@ class SketchIndex:
 
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
-                               estimator: str = "plain",
+                               estimator: str = registry.DEFAULT_ESTIMATOR,
                                approx_ok: Optional[ApproxContract] = None,
                                deadline_ms: Optional[float] = None):
         with obs.span("index.query", metric="index.threshold_ms",
@@ -585,5 +589,5 @@ class SketchIndex:
         if not Us:
             nvec = self.cfg.vectors_per_row
             return LpSketch(U=jnp.zeros((0, nvec, self.cfg.k)),
-                            moments=jnp.zeros((0, self.cfg.p - 1)))
+                            moments=jnp.zeros((0, self.cfg.num_moments)))
         return LpSketch(U=jnp.concatenate(Us), moments=jnp.concatenate(Ms))

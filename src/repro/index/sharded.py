@@ -77,6 +77,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import obs
+from repro.core import registry
 from repro.core.distributed import (
     _tuple as _axes_tuple,
     mesh_shard_devices,
@@ -183,11 +184,11 @@ class RebalancePolicy:
             raise ValueError("min_interval_s must be >= 0")
 
 
-def _query_on(dev, qsk: LpSketch, q_packed, estimator: str):
+def _query_on(dev, qsk: LpSketch, q_packed, spec: registry.EstimatorSpec):
     """Move the (tiny) query-side factors onto one shard's device."""
     if dev is None:
         return qsk, q_packed
-    if estimator == "plain":
+    if spec.uses_packed:
         Aq, nq = q_packed
         return qsk, (jax.device_put(Aq, dev), jax.device_put(nq, dev))
     qs = LpSketch(U=jax.device_put(qsk.U, dev),
@@ -214,7 +215,7 @@ def _group_by_shard(segments: Sequence[Segment], n_shards: int):
     return out, base
 
 
-def _shard_candidates(qsk, q_packed, group, cfg, estimator, backend,
+def _shard_candidates(qsk, q_packed, group, cfg, spec, backend,
                       col_block, top_k, q):
     """Stage 1: one shard's candidate list in global-position space.
 
@@ -227,7 +228,7 @@ def _shard_candidates(qsk, q_packed, group, cfg, estimator, backend,
     idx = jnp.full((q, k), _IDX_SENTINEL, jnp.int32)
     for base, seg in group:
         vals, idx = _fold_segment_topk(vals, idx, qsk, q_packed, seg, cfg,
-                                       estimator, backend, col_block, base, k)
+                                       spec, backend, col_block, base, k)
     return vals, idx
 
 
@@ -320,7 +321,7 @@ def sharded_fan_topk(
     devices: Sequence,
     *,
     top_k: int,
-    estimator: str = "plain",
+    estimator: str = registry.DEFAULT_ESTIMATOR,
     engine: Optional[EngineConfig] = None,
 ) -> Tuple[jax.Array, np.ndarray]:
     """Two-stage top-k fan over device-placed segments.
@@ -328,8 +329,8 @@ def sharded_fan_topk(
     Bit-identical (values and tie-broken ids) to ``fan_topk`` over the same
     segments: stage 1 keeps raw strip values, stage 2's (value, position)
     lexsort reproduces the dense tie-break regardless of placement."""
-    if estimator not in ("plain", "mle"):
-        raise ValueError(f"unknown estimator {estimator!r}")
+    spec = registry.resolve(estimator, p=cfg.p,
+                            projection=cfg.projection.family)
     _check_top_k(top_k)
     backend, _, col_block = (engine or EngineConfig()).resolve()
     q = qsk.n
@@ -339,7 +340,7 @@ def sharded_fan_topk(
         return (jnp.zeros((q, 0), jnp.float32), np.zeros((q, 0), np.int64))
 
     groups, total = _group_by_shard(segments, len(devices))
-    q_packed = _pack_query(qsk, cfg, estimator)
+    q_packed = _pack_query(qsk, cfg, spec)
 
     # dispatch every shard's stage-1 work before gathering any of it: jax
     # dispatch is async, so the shards compute concurrently and stage-1
@@ -351,9 +352,9 @@ def sharded_fan_topk(
             dev = devices[shard] if shard is not None else None
             with obs.span("index.fan.shard", shard=shard,
                           segments=len(group)):
-                qs, qp = _query_on(dev, qsk, q_packed, estimator)
+                qs, qp = _query_on(dev, qsk, q_packed, spec)
                 pending.append(_shard_candidates(qs, qp, group, cfg,
-                                                 estimator, backend,
+                                                 spec, backend,
                                                  col_block, top_k, q))
 
         # only the (q, k) candidate lists cross the shard boundary
@@ -375,7 +376,7 @@ def sharded_threshold_scan(
     *,
     radius: float,
     relative: bool = False,
-    estimator: str = "plain",
+    estimator: str = registry.DEFAULT_ESTIMATOR,
     engine: Optional[EngineConfig] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """(query_rows, row_ids) with D < radius over device-placed segments.
@@ -383,9 +384,11 @@ def sharded_threshold_scan(
     Per-shard strips leave only hit pairs; the final (query, id) lexsort is
     the same order ``threshold_scan`` (and the engine's row-major dense
     contract) produces, so results are pair-for-pair identical."""
+    spec = registry.resolve(estimator, p=cfg.p,
+                            projection=cfg.projection.family)
     backend, _, col_block = (engine or EngineConfig()).resolve()
     groups, _ = _group_by_shard(segments, len(devices))
-    q_packed = _pack_query(qsk, cfg, estimator)
+    q_packed = _pack_query(qsk, cfg, spec)
     nq_h = np.asarray(qsk.norm_pp(cfg.p))
 
     rows_out, ids_out = [], []
@@ -395,10 +398,10 @@ def sharded_threshold_scan(
             dev = devices[shard] if shard is not None else None
             with obs.span("index.fan.shard", shard=shard,
                           segments=len(group)):
-                qs, qp = _query_on(dev, qsk, q_packed, estimator)
+                qs, qp = _query_on(dev, qsk, q_packed, spec)
                 for _base, seg in group:
                     rr, ii = _segment_threshold_hits(qs, qp, seg, cfg,
-                                                     estimator, backend,
+                                                     spec, backend,
                                                      col_block, nq_h,
                                                      radius, relative)
                     rows_out.extend(rr)
@@ -486,7 +489,7 @@ class ShardedSketchIndex(SketchIndex):
         # guessing from `_fan_mesh` directly.
         s["stage1"] = {
             est: self._last_route.get(est, self._predicted_stage1(est))
-            for est in ("plain", "mle")
+            for est in registry.names_for(self.cfg)
         }
         s["stage1"]["last"] = self._last_stage1
         s["planner"] = self.planner.stats()
@@ -728,11 +731,11 @@ class ShardedSketchIndex(SketchIndex):
             sp.set(stage1=label, planned=STAGE1_LABEL[plan.route])
 
     def query_sketch(self, qsk: LpSketch, top_k: int = 10,
-                     estimator: str = "plain", *,
+                     estimator: str = registry.DEFAULT_ESTIMATOR, *,
                      approx_ok: Optional[ApproxContract] = None,
                      deadline_ms: Optional[float] = None):
-        if estimator not in ("plain", "mle"):
-            raise ValueError(f"unknown estimator {estimator!r}")
+        registry.resolve(estimator, p=self.cfg.p,
+                         projection=self.cfg.projection.family)
         _check_top_k(top_k)
         with obs.span("index.query", metric="index.query_ms", kind="topk",
                       top_k=top_k, estimator=estimator, rows=qsk.n) as sp:
@@ -753,10 +756,11 @@ class ShardedSketchIndex(SketchIndex):
         """Execute one top-k route; None means this route declines (empty
         stack, failed approx gate) and the plan's next fallback runs."""
         if route == "stacked":
-            if plan.estimator == "plain":
-                return self._stacked_fan_topk(qsk, segments, top_k)
+            spec = registry.get(plan.estimator)
+            if spec.capabilities.stacked_topk == registry.STACKED_PACKED:
+                return self._stacked_fan_topk(qsk, segments, top_k, spec)
             return self._stacked_fan_topk_mle(qsk, segments, top_k,
-                                              plan.approx)
+                                              plan.approx, spec)
         return sharded_fan_topk(qsk, segments, self.cfg, self.devices,
                                 top_k=top_k, estimator=plan.estimator,
                                 engine=self.engine)
@@ -852,7 +856,8 @@ class ShardedSketchIndex(SketchIndex):
         return jax.make_array_from_single_device_arrays(
             (self.n_shards, mask.shape[1]), mask.sharding, parts)
 
-    def _stacked_fan_topk(self, qsk: LpSketch, segments, top_k: int):
+    def _stacked_fan_topk(self, qsk: LpSketch, segments, top_k: int,
+                          spec: registry.EstimatorSpec):
         """Stage 1 under ``shard_map``: all shards fold their stacked strips
         concurrently; stage 2 is the same host-side (value, position) re-rank
         as the dispatch fan, so results are bit-identical to it (and to the
@@ -875,7 +880,7 @@ class ShardedSketchIndex(SketchIndex):
         with obs.span("index.fan.stage1", metric="index.stage1_parallel_ms",
                       mode="parallel", shards=len(shard_groups)):
             st = self._stacked_operands(shard_groups, col_block)
-            q_packed = _pack_query(qsk, self.cfg, "plain")
+            q_packed = _pack_query(qsk, self.cfg, spec)
             Aq, nq = q_packed
             # one shard_map dispatch covers every shard's stage-1 fold ...
             # clamp the static top_k to the stack height: every k above it
@@ -889,7 +894,7 @@ class ShardedSketchIndex(SketchIndex):
             # sealed block) folds through the same per-segment strips as
             # always
             local_pending = [
-                _shard_candidates(qsk, q_packed, grp, self.cfg, "plain",
+                _shard_candidates(qsk, q_packed, grp, self.cfg, spec,
                                   backend, col_block, top_k, q)
                 for s, grp in groups if s is None
             ]
@@ -932,7 +937,8 @@ class ShardedSketchIndex(SketchIndex):
         return st.Usk, st.Msk
 
     def _stacked_fan_topk_mle(self, qsk: LpSketch, segments, top_k: int,
-                              contract: ApproxContract):
+                              contract: ApproxContract,
+                              spec: registry.EstimatorSpec):
         """Margin-MLE stage 1 on the stacked ``shard_map`` fan — the
         ``approx_ok`` route.
 
@@ -957,13 +963,13 @@ class ShardedSketchIndex(SketchIndex):
                     np.zeros((q, k_out), np.int64))
 
         st = self._stacked_operands(shard_groups, col_block)
-        gate_key = ("mle_topk", st.key, contract)
+        gate_key = (f"{spec.name}_topk", st.key, contract)
         gate = self.planner.gate_status(gate_key)
         if gate is False:
             return None  # this snapshot failed the contract: dispatch serves
 
         with obs.span("index.fan.stage1", metric="index.stage1_parallel_ms",
-                      mode="parallel", estimator="mle",
+                      mode="parallel", estimator=spec.name,
                       shards=len(shard_groups)):
             Usk, Msk = self._stacked_mle_operands(st)
             vals_sh, pos_sh = stacked_mle_topk_shards(
@@ -974,7 +980,7 @@ class ShardedSketchIndex(SketchIndex):
             # the local group (active segment + unplaced sealed blocks)
             # folds through the exact per-segment mle strips as always
             local_pending = [
-                _shard_candidates(qsk, None, grp, self.cfg, "mle", backend,
+                _shard_candidates(qsk, None, grp, self.cfg, spec, backend,
                                   col_block, top_k, q)
                 for s, grp in groups if s is None
             ]
@@ -998,7 +1004,7 @@ class ShardedSketchIndex(SketchIndex):
             # sorted reference is sound even if near-ties reorder.
             ref_vals, _ref_ids = sharded_fan_topk(
                 qsk, segments, self.cfg, self.devices, top_k=top_k,
-                estimator="mle", engine=self.engine)
+                estimator=spec.name, engine=self.engine)
             ok, drift = within_tolerance(
                 np.asarray(out[0]), np.asarray(ref_vals),
                 rtol=contract.rtol, atol=contract.atol)
@@ -1009,11 +1015,11 @@ class ShardedSketchIndex(SketchIndex):
 
     def query_threshold_sketch(self, qsk: LpSketch, *, radius: float,
                                relative: bool = False,
-                               estimator: str = "plain",
+                               estimator: str = registry.DEFAULT_ESTIMATOR,
                                approx_ok: Optional[ApproxContract] = None,
                                deadline_ms: Optional[float] = None):
-        if estimator not in ("plain", "mle"):
-            raise ValueError(f"unknown estimator {estimator!r}")
+        registry.resolve(estimator, p=self.cfg.p,
+                         projection=self.cfg.projection.family)
         with obs.span("index.query", metric="index.threshold_ms",
                       kind="threshold", estimator=estimator,
                       rows=qsk.n) as sp:
@@ -1034,15 +1040,17 @@ class ShardedSketchIndex(SketchIndex):
                              qsk: LpSketch, segments, radius: float,
                              relative: bool):
         if route == "stacked":
-            # the planner never routes mle thresholds here (no stacked mle
-            # threshold scan exists) — plain only by construction
-            return self._stacked_threshold(qsk, segments, radius, relative)
+            # the planner only routes estimators whose spec declares
+            # ``stacked_threshold`` here — packed-factor strips by
+            # construction
+            return self._stacked_threshold(qsk, segments, radius, relative,
+                                           registry.get(plan.estimator))
         return sharded_threshold_scan(
             qsk, segments, self.cfg, self.devices, radius=radius,
             relative=relative, estimator=plan.estimator, engine=self.engine)
 
     def _stacked_threshold(self, qsk: LpSketch, segments, radius: float,
-                           relative: bool):
+                           relative: bool, spec: registry.EstimatorSpec):
         """Threshold stage 1 under ``shard_map``: all shards evaluate the
         masked strict ``D < radius`` criterion over their stacked blocks
         concurrently (``core.distributed.stacked_threshold_shards``); only
@@ -1065,7 +1073,7 @@ class ShardedSketchIndex(SketchIndex):
         with obs.span("index.fan.stage1", metric="index.stage1_parallel_ms",
                       mode="parallel", shards=len(shard_groups)):
             st = self._stacked_operands(shard_groups, col_block)
-            q_packed = _pack_query(qsk, self.cfg, "plain")
+            q_packed = _pack_query(qsk, self.cfg, spec)
             Aq, nq = q_packed
             hits_sh = stacked_threshold_shards(
                 Aq, nq, st.B, st.nb, self._stacked_mask(st),
@@ -1081,7 +1089,7 @@ class ShardedSketchIndex(SketchIndex):
                     continue
                 for _base, seg in grp:
                     rr, ii = _segment_threshold_hits(
-                        qsk, q_packed, seg, self.cfg, "plain", backend,
+                        qsk, q_packed, seg, self.cfg, spec, backend,
                         col_block, nq_h, radius, relative)
                     rows_out.extend(rr)
                     ids_out.extend(ii)

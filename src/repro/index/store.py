@@ -55,6 +55,8 @@ def _cfg_to_json(cfg: SketchConfig) -> dict:
             "s": cfg.projection.s,
             "dtype": np.dtype(cfg.projection.dtype).name,
             "block_d": cfg.projection.block_d,
+            "alpha": cfg.projection.alpha,
+            "density": cfg.projection.density,
         },
     }
 
@@ -66,6 +68,8 @@ def _cfg_from_json(d: dict) -> SketchConfig:
         projection=ProjectionSpec(
             family=proj["family"], s=proj["s"],
             dtype=jnp.dtype(proj["dtype"]), block_d=proj["block_d"],
+            # saves that predate the stable families carry no alpha/density
+            alpha=proj.get("alpha", 2.0), density=proj.get("density", 0.05),
         ),
     )
 

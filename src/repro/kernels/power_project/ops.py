@@ -9,9 +9,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.decomposition import interaction_orders, power_moments
+from repro.core.decomposition import interaction_orders
 from repro.core.projections import projection_matrix
-from repro.core.sketch import LpSketch, SketchConfig, _matrix_key
+from repro.core.sketch import LpSketch, SketchConfig, _matrix_key, sketch_moments
 
 from .kernel import power_project_call
 from .ref import power_project_ref
@@ -37,7 +37,12 @@ def sketch_via_kernel(
 ) -> LpSketch:
     """LpSketch built by the fused kernel — same R stream as repro.core.sketch."""
     n, D = X.shape
-    if cfg.strategy == "basic":
+    if cfg.fractional:
+        # α-stable sketch: power 1 only — the fused kernel consumes the
+        # streamed stable R tiles exactly like the even-p families
+        R = projection_matrix(_matrix_key(key, 0), D, cfg.k, cfg.projection)
+        U = power_project(X, R, (1,), interpret=interpret)
+    elif cfg.strategy == "basic":
         R = projection_matrix(_matrix_key(key, 0), D, cfg.k, cfg.projection)
         powers = tuple(range(1, cfg.p))
         U = power_project(X, R, powers, interpret=interpret)
@@ -50,4 +55,4 @@ def sketch_via_kernel(
             ua.append(both[:, 0])
             ub.append(both[:, 1])
         U = jnp.stack(ua + ub, axis=1)
-    return LpSketch(U=U.astype(cfg.projection.dtype), moments=power_moments(X, cfg.p))
+    return LpSketch(U=U.astype(cfg.projection.dtype), moments=sketch_moments(X, cfg))

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.compat import make_mesh
+from repro.core import registry
 from repro.configs.base import TrainKnobs, reduced
 from repro.configs.registry import get_config
 from repro.launch.mesh import make_parallel
@@ -36,6 +37,14 @@ def main(argv=None):
     ap.add_argument("--trace", action="store_true",
                     help="enable span tracing + latency histograms; dumps "
                          "the query plan and slow-query log after the KNN run")
+    ap.add_argument("--estimator", default=registry.MARGIN_MLE,
+                    choices=registry.names(),
+                    help="distance estimator for the KNN service; the "
+                         "sketch config (p, projection family) follows the "
+                         "spec's declared domain")
+    ap.add_argument("--p", type=float, default=None,
+                    help="l_p norm order; defaults to 4 for even-p "
+                         "estimators and 1.5 for fractional-p ones")
     ap.add_argument("--approx-ok", type=float, default=None, metavar="RTOL",
                     help="opt the KNN queries into the planner's approximate "
                          "contract with this relative tolerance (mle may then "
@@ -68,9 +77,16 @@ def main(argv=None):
               f":{server.server_address[1]}/metrics")
 
     if args.knn:
-        from repro.core import SketchConfig
+        from repro.core import ProjectionSpec, SketchConfig
         from repro.index import ApproxContract
-        svc = SketchKnnService(SketchConfig(p=4, k=128, block_d=512))
+        spec = registry.get(args.estimator)
+        p = args.p if args.p is not None else (
+            4 if spec.p_domain.contains(4) else 1.5)
+        proj = ProjectionSpec()
+        if proj.family not in spec.projections:
+            proj = ProjectionSpec(family=spec.projections[0])
+        svc = SketchKnnService(
+            SketchConfig(p=p, k=128, block_d=512, projection=proj))
         approx = (ApproxContract(rtol=args.approx_ok)
                   if args.approx_ok is not None else None)
         corpus = jax.random.uniform(jax.random.key(0),
@@ -90,10 +106,12 @@ def main(argv=None):
             front_door = FrontDoor(svc.index, n_replicas=args.replicas,
                                    quota=quota,
                                    default_deadline_ms=args.deadline_ms)
-            d, idx = front_door.query(queries, top_k=5, estimator="mle",
+            d, idx = front_door.query(queries, top_k=5,
+                                      estimator=args.estimator,
                                       approx_ok=approx)
         else:
-            d, idx = svc.query(queries, top_k=5, mle=True, approx_ok=approx)
+            d, idx = svc.query(queries, top_k=5, estimator=args.estimator,
+                               approx_ok=approx)
         t2 = time.perf_counter()
         hit = float(jnp.mean((jnp.asarray(idx)[:, 0]
                               == jnp.arange(args.queries))))

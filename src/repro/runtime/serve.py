@@ -8,7 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import LpSketch, SketchConfig
+from repro.core import LpSketch, SketchConfig, registry
 from repro.index import (
     CompactionPolicy,
     IndexConfig,
@@ -95,15 +95,20 @@ class SketchKnnService:
         return self.index.delete(row_ids)
 
     def query(self, rows: jax.Array, top_k: int = 10, mle: bool = False,
-              approx_ok=None):
-        """``approx_ok`` (an ``repro.index.ApproxContract``) opts the query
-        into planner-gated approximate routes (mle on the stacked fan);
-        ``None`` keeps the bit-exact default contract."""
+              approx_ok=None, *, estimator: Optional[str] = None):
+        """``estimator`` names any spec in ``repro.core.registry``
+        (``registry.names()``); the legacy ``mle`` flag is honoured when no
+        explicit name is given.  ``approx_ok`` (an
+        ``repro.index.ApproxContract``) opts the query into planner-gated
+        approximate routes (margin-MLE on the stacked fan); ``None`` keeps
+        the bit-exact default contract."""
         if self.index.n_live == 0:
             raise RuntimeError("empty corpus")
+        if estimator is None:
+            estimator = (registry.MARGIN_MLE if mle
+                         else registry.DEFAULT_ESTIMATOR)
         qs = jnp.asarray(rows)
-        return self.index.query(qs, top_k=top_k,
-                                estimator="mle" if mle else "plain",
+        return self.index.query(qs, top_k=top_k, estimator=estimator,
                                 approx_ok=approx_ok)
 
     def save(self, path: str) -> str:

@@ -49,6 +49,7 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from repro import obs
+from repro.core import registry
 from repro.index.query import MicroBatcher
 from repro.obs.metrics import REGISTRY
 
@@ -118,7 +119,8 @@ class FrontDoor:
 
     # --------------------------------------------------------------- serving
 
-    def query(self, rows, top_k: int = 10, estimator: str = "plain", *,
+    def query(self, rows, top_k: int = 10,
+              estimator: str = registry.DEFAULT_ESTIMATOR, *,
               tenant: str = "default", deadline_ms: Optional[float] = None,
               approx_ok=None):
         """Top-k for ``rows`` under ``tenant``'s budget.

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.core import registry
 from repro.core.pairwise import pack_sketch
 from repro.core.sketch import sketch
 from repro.index.sharded import sharded_fan_topk, sharded_threshold_scan
@@ -254,7 +255,8 @@ class ReplicaSet:
 
     # --------------------------------------------------------------- query
 
-    def query(self, rows, top_k: int = 10, estimator: str = "plain", *,
+    def query(self, rows, top_k: int = 10,
+              estimator: str = registry.DEFAULT_ESTIMATOR, *,
               approx_ok=None, deadline_ms: Optional[float] = None,
               replica: Optional[int] = None):
         """Top-k via one replica lane — results bit-identical to
@@ -289,7 +291,8 @@ class ReplicaSet:
         return out
 
     def query_threshold(self, rows, radius: float, *, relative: bool = False,
-                        estimator: str = "plain", approx_ok=None,
+                        estimator: str = registry.DEFAULT_ESTIMATOR,
+                        approx_ok=None,
                         deadline_ms: Optional[float] = None,
                         replica: Optional[int] = None):
         """(query_rows, row_ids) with D < radius via one replica lane —

@@ -1,0 +1,209 @@
+"""EstimatorSpec registry contracts: the one validation gate, the
+capability-driven planner routes, and the geometric-mean variance gate.
+
+The registry is the single place (p, projection, estimator) compatibility
+lives; these tests pin its error surface (unknown names, out-of-domain p,
+wrong projection family), the register/overwrite semantics, and — the point
+of the capability model — that the planner's route table is a pure function
+of each spec's declared ``RouteCapabilities``, including for specs
+registered after import.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SketchConfig, registry
+from repro.index import ApproxContract, QueryPlanner
+
+
+# ---------------------------------------------------------------- resolution
+
+
+def test_builtin_names_in_registration_order():
+    assert registry.names()[:3] == (
+        registry.PLAIN, registry.MARGIN_MLE, registry.GEOMETRIC_MEAN)
+
+
+def test_unknown_estimator_lists_registered_names():
+    with pytest.raises(ValueError, match="unknown estimator 'exact'"):
+        registry.get("exact")
+    with pytest.raises(ValueError, match="registered:.*'plain'"):
+        registry.resolve("nope")
+
+
+@pytest.mark.parametrize("name,p", [
+    (registry.PLAIN, 3),       # odd
+    (registry.PLAIN, 2),       # even but below the sketch decomposition
+    (registry.MARGIN_MLE, 1.5),
+    (registry.GEOMETRIC_MEAN, 3),   # fractional estimator, p > 2
+    (registry.GEOMETRIC_MEAN, 0.0),  # lo is exclusive
+])
+def test_resolve_rejects_out_of_domain_p(name, p):
+    with pytest.raises(ValueError, match="requires"):
+        registry.resolve(name, p=p)
+
+
+@pytest.mark.parametrize("name,p,proj", [
+    (registry.PLAIN, 4, "stable"),
+    (registry.GEOMETRIC_MEAN, 1.5, "normal"),
+])
+def test_resolve_rejects_incompatible_projection_family(name, p, proj):
+    with pytest.raises(ValueError, match="projection family"):
+        registry.resolve(name, p=p, projection=proj)
+
+
+def test_resolve_accepts_declared_scenarios():
+    assert registry.resolve(registry.PLAIN, p=4, projection="normal").uses_packed
+    spec = registry.resolve(registry.GEOMETRIC_MEAN, p=1.5,
+                            projection="stable_sparse")
+    assert not spec.uses_packed
+    assert spec.capabilities.stacked_topk is None
+
+
+def test_names_for_enumerates_compatible_specs():
+    even = SketchConfig(p=4, k=16, block_d=32)
+    assert registry.names_for(even) == (registry.PLAIN, registry.MARGIN_MLE)
+    from repro.core import ProjectionSpec
+    frac = SketchConfig(p=1.5, k=16, block_d=32,
+                        projection=ProjectionSpec(family="stable"))
+    assert registry.names_for(frac) == (registry.GEOMETRIC_MEAN,)
+
+
+# -------------------------------------------------------------- registration
+
+
+def _dummy_spec(name, **caps):
+    return registry.EstimatorSpec(
+        name=name,
+        description="test-only spec",
+        p_domain=registry.PDomain(even_min=40),  # matches no real cfg
+        projections=("normal",),
+        uses_packed=False,
+        pairwise=lambda sa, sb, cfg, *, clip=True: None,
+        capabilities=registry.RouteCapabilities(**caps),
+    )
+
+
+def test_register_rejects_duplicates_and_non_specs():
+    with pytest.raises(TypeError):
+        registry.register_estimator("not a spec")
+    name = "dup_test_estimator"
+    registry.register_estimator(_dummy_spec(name))
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            registry.register_estimator(_dummy_spec(name))
+        replaced = registry.register_estimator(
+            _dummy_spec(name, stacked_threshold=True), overwrite=True)
+        assert registry.get(name) is replaced
+        assert registry.get(name).capabilities.stacked_threshold
+    finally:
+        registry._SPECS.pop(name, None)
+
+
+# ------------------------------------------------- capability-driven routing
+
+
+_SHARDED = dict(sharded=True, mesh_available=True, sealed_segments=4)
+
+
+@pytest.mark.parametrize(
+    "spec", registry.specs(), ids=lambda s: s.name)
+def test_route_table_is_a_function_of_capabilities(spec):
+    """For every registered spec the planner's route is decided by the
+    spec's declared capabilities — no estimator-name special cases."""
+    caps = spec.capabilities
+    approx = ApproxContract(rtol=1e-4)
+    p = QueryPlanner()
+
+    plan = p.plan(reduce="topk", estimator=spec.name, **_SHARDED)
+    assert plan.route == (
+        "stacked" if caps.fused_bitwise_stable else "dispatch")
+
+    plan = p.plan(reduce="topk", estimator=spec.name, approx_ok=approx,
+                  **_SHARDED)
+    assert plan.route == (
+        "stacked" if caps.stacked_topk is not None else "dispatch")
+
+    plan = p.plan(reduce="threshold", estimator=spec.name, **_SHARDED)
+    assert plan.route == (
+        "stacked" if caps.fused_bitwise_stable and caps.stacked_threshold
+        else "dispatch")
+
+    plan = p.plan(reduce="threshold", estimator=spec.name, approx_ok=approx,
+                  **_SHARDED)
+    assert plan.route == (
+        "stacked" if caps.stacked_threshold else "dispatch")
+
+    # dispatch is always the terminal fallback
+    assert plan.chain[-1] == "dispatch"
+
+
+def test_newly_registered_spec_drives_planner_routes():
+    """Register a spec after import and the planner serves it from its
+    capability flags alone — the abstraction the refactor exists for."""
+    name = "route_probe_estimator"
+    registry.register_estimator(_dummy_spec(
+        name, stacked_topk=registry.STACKED_PACKED,
+        fused_bitwise_stable=True, stacked_threshold=False))
+    try:
+        p = QueryPlanner()
+        assert p.plan(reduce="topk", estimator=name,
+                      **_SHARDED).route == "stacked"
+        assert p.plan(reduce="threshold", estimator=name,
+                      **_SHARDED).route == "dispatch"
+    finally:
+        registry._SPECS.pop(name, None)
+
+
+# ------------------------------------------- geometric-mean statistical gate
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("p", [1.0, 1.5])
+def test_gm_empirical_variance_tracks_closed_form(p):
+    """Seeded Monte-Carlo gate on the geometric-mean estimator: over
+    independent α-stable sketch draws its empirical variance must track the
+    closed-form relative-variance model (Li arXiv:0806.4422, exact — not
+    asymptotic — for this estimator), and its mean must sit on the true
+    fractional l_p^p distance.  A broken CMS sampler, a wrong gm constant,
+    or a degraded log-mean fold shows up as a loud ratio/bias violation."""
+    import jax.numpy as jnp
+
+    from repro.core import (
+        ProjectionSpec,
+        pairwise_geometric_mean,
+        sketch,
+        variance_geometric_mean,
+    )
+    from repro.core.sketch import LpSketch
+    from repro.core.stable import exact_fractional_lp
+
+    k, n_seeds = 128, 400
+    cfg = SketchConfig(p=p, k=k, block_d=64,
+                       projection=ProjectionSpec(family="stable"))
+    rng = np.random.default_rng(7)
+    x = rng.uniform(0.0, 1.0, 48)
+    y = rng.uniform(0.0, 1.0, 48)
+    X = jnp.asarray(np.stack([x, y]), jnp.float32)
+
+    ests = np.empty(n_seeds)
+    for seed in range(n_seeds):
+        sk = sketch(X, jax.random.key(seed), cfg)
+        sa = LpSketch(U=sk.U[:1], moments=sk.moments[:1])
+        sb = LpSketch(U=sk.U[1:], moments=sk.moments[1:])
+        ests[seed] = float(pairwise_geometric_mean(sa, sb, cfg)[0, 0])
+
+    bound = float(variance_geometric_mean(
+        jnp.asarray(x), jnp.asarray(y), p, k))
+    ratio = ests.var(ddof=1) / bound
+    # the sample variance of 400 draws spreads ~+-20% (heavier-tailed than
+    # chi^2 for the log-normal-ish gm estimator); the margin catches real
+    # regressions without seed lottery
+    assert 0.5 <= ratio <= 1.7, f"empirical/closed-form ratio {ratio:.3f}"
+
+    true_d = float(exact_fractional_lp(X[:1], X[1:], p)[0, 0])
+    se_mean = np.sqrt(bound / n_seeds)
+    assert abs(ests.mean() - true_d) <= 4 * se_mean, (
+        f"gm mean {ests.mean():.4f} vs true {true_d:.4f} "
+        f"(4*se={4 * se_mean:.4f})")

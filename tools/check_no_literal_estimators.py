@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Static-analysis guard: no quoted estimator names outside the registry.
+
+The whole point of ``repro.core.registry`` is that (p, projection,
+estimator) compatibility lives in ONE place — an ``EstimatorSpec`` — and
+every layer consumes specs.  A stray ``estimator == "plain"`` or a
+hard-coded ``"mle"`` default reintroduces the stringly-typed branches the
+registry refactor removed, and silently bypasses the spec's p-domain and
+capability checks.
+
+This script scans ``src/repro`` for quoted estimator-name literals
+(``"plain"`` / ``"mle"`` / ``"gm"``, single- or double-quoted) and fails if
+any appear outside the allowlisted registry module, printing each offending
+``path:line``.  Code that needs an estimator name must use the registry's
+constants (``registry.PLAIN``, ``registry.MARGIN_MLE``,
+``registry.GEOMETRIC_MEAN``, ``registry.DEFAULT_ESTIMATOR``) or carry a
+resolved ``EstimatorSpec``.
+
+Usage (CI runs this from the repo root)::
+
+    python tools/check_no_literal_estimators.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
+
+# the one module allowed to spell the names out: it DEFINES them
+ALLOWED = {SRC / "core" / "registry.py"}
+
+_LITERAL = re.compile(r"""["'](plain|mle|gm)["']""")
+
+
+def offending_lines(path: Path):
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        m = _LITERAL.search(line)
+        if m:
+            yield lineno, m.group(1), line.strip()
+
+
+def main() -> int:
+    bad = []
+    for path in sorted(SRC.rglob("*.py")):
+        if path in ALLOWED:
+            continue
+        for lineno, name, line in offending_lines(path):
+            bad.append((path.relative_to(ROOT), lineno, name, line))
+    if bad:
+        print("quoted estimator-name literals outside repro.core.registry:")
+        for rel, lineno, name, line in bad:
+            print(f"  {rel}:{lineno}: {name!r} in: {line}")
+        print(f"\n{len(bad)} offending line(s).  Use the registry constants "
+              "(repro.core.registry.PLAIN / MARGIN_MLE / GEOMETRIC_MEAN / "
+              "DEFAULT_ESTIMATOR) or thread a resolved EstimatorSpec instead.")
+        return 1
+    print("ok: no estimator-name literals outside repro.core.registry")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
